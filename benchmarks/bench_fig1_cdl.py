@@ -1,0 +1,55 @@
+"""Paper Figure 1: single-forward time vs decode length → the critical
+decoding length (CDL).
+
+Two views: (a) measured on this CPU (same flat-then-rising shape, CPU's
+FLOPs redundancy), (b) v5e roofline model for AntGLM-10B: t(l) =
+max(weight+KV bytes / 819GB/s, 2·N·l / 197T) — the analytic CDL is where
+compute time overtakes the weight stream."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.models.transformer import tree_step, init_cache
+
+from .common import bench_model
+
+
+def run() -> None:
+    cfg, params = bench_model(max_seq_len=512)
+    B, ctx = 1, 256
+    rng = np.random.RandomState(0)
+    cache = init_cache(cfg, B)
+    lens = jnp.asarray([ctx], jnp.int32)
+    for dl in (1, 2, 4, 8, 16, 32, 64, 128):
+        toks = jnp.asarray(rng.randint(1, 500, (B, dl)), jnp.int32)
+        pos = lens[:, None] + jnp.arange(dl)[None, :]
+        mask = jnp.asarray(np.tril(np.ones((dl, dl), bool))[None])
+        f = jax.jit(lambda c, t, p, m: tree_step(cfg, params, c, lens, t,
+                                                 p, m)[1])
+        f(cache, toks, pos, mask).block_until_ready()   # compile
+        t0 = time.perf_counter()
+        for _ in range(10):
+            f(cache, toks, pos, mask).block_until_ready()
+        cpu_ms = (time.perf_counter() - t0) / 10 * 1e3
+        # v5e analytic for AntGLM-10B
+        big = get_arch("antglm_10b").full_config()
+        n = big.n_params()
+        io_t = (n * 2 + big.n_layers * 2 * big.n_kv_heads * big.dh
+                * (ctx + dl) * 2) / HBM_BW
+        fl_t = 2 * n * dl / PEAK_FLOPS_BF16
+        print(f"fig1/dl{dl},{cpu_ms*1e3:.1f},"
+              f"cpu_ms={cpu_ms:.2f} v5e_io_ms={io_t*1e3:.3f} "
+              f"v5e_compute_ms={fl_t*1e3:.3f} "
+              f"bound={'io' if io_t > fl_t else 'compute'}")
+    cdl = int(PEAK_FLOPS_BF16 / HBM_BW)   # l where 2Nl/peak == 2N/bw
+    print(f"fig1/analytic_cdl,0.0,v5e_CDL~{cdl}_tokens_per_step")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Figures 4+5: decoding length × branch length → inference speed and
+EDL, for single/parallel/hierarchical strategies."""
+from __future__ import annotations
+
+from repro.core import LookaheadConfig
+
+from .common import bench_model, emit, make_dataset, run_serving
+
+
+def run(n_queries: int = 8, max_new: int = 48) -> None:
+    cfg, params = bench_model()
+    ds = make_dataset("antrag", n_queries + 4)
+    for strategy in ("single", "parallel", "hierarchical"):
+        for dl in (8, 16, 32, 64):
+            for bl in (4, 8, 16):
+                la = LookaheadConfig(strategy=strategy, decoding_length=dl,
+                                     branch_length=bl)
+                r = run_serving(cfg, params, la, ds[4:], max_new=max_new, phase=2,
+                                warm_with_outputs=4, n_queries=n_queries)
+                emit(f"fig45/{strategy}/dl{dl}/bl{bl}",
+                     1e6 * r.wall_s / max(r.total_tokens, 1),
+                     f"edl={r.edl:.2f} "
+                     f"steps_compression={r.steps_compression:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Figure 6 (Appendix D): inference speed vs warm-up sample count."""
+from __future__ import annotations
+
+from repro.core import LookaheadConfig
+
+from .common import bench_model, emit, make_dataset, run_serving
+
+
+def run(n_queries: int = 8, max_new: int = 48) -> None:
+    cfg, params = bench_model()
+    ds = make_dataset("antrag", 40)
+    la = LookaheadConfig(strategy="hierarchical", decoding_length=32,
+                         branch_length=8)
+    for n_warm in (0, 2, 8, 16):
+        r = run_serving(cfg, params, la, ds[:n_queries + n_warm],
+                        max_new=max_new, phase=2,
+                        warm_with_outputs=n_warm, n_queries=n_queries)
+        emit(f"fig6/warm{n_warm}", 1e6 * r.wall_s / max(r.total_tokens, 1),
+             f"steps_compression={r.steps_compression:.2f}x edl={r.edl:.2f}")
+
+
+if __name__ == "__main__":
+    run()

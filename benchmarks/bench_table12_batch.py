@@ -1,0 +1,39 @@
+"""Paper Table 12 (Appendix E): batched lookahead — batch sizes 1/2/4,
+baseline vs LLMA vs lookahead.  First batched implementation of
+speculative-style decoding per the paper; heterogenous per-row cache lengths
+and per-row draft trees are exercised here."""
+from __future__ import annotations
+
+from repro.core import LookaheadConfig
+
+from .common import bench_model, emit, make_dataset, run_serving
+
+METHODS = {
+    "baseline": LookaheadConfig(strategy="none", decoding_length=0),
+    "llma": LookaheadConfig(strategy="single", decoding_length=16,
+                            branch_length=16),
+    "la-hier": LookaheadConfig(strategy="hierarchical", decoding_length=32,
+                               branch_length=8),
+}
+
+
+def run(n_queries: int = 8, max_new: int = 40) -> None:
+    cfg, params = bench_model()
+    ds = make_dataset("antrag", n_queries + 4)
+    for batch in (1, 2, 4):
+        base = None
+        for m_name, la in METHODS.items():
+            r = run_serving(cfg, params, la, ds[4:], max_new=max_new, phase=2,
+                            warm_with_outputs=4, n_queries=n_queries,
+                            batch=batch)
+            if m_name == "baseline":
+                base = r
+            emit(f"table12/b{batch}/{m_name}",
+                 1e6 * r.wall_s / max(r.total_tokens, 1),
+                 f"steps_compression={r.steps_compression:.2f}x "
+                 f"edl={r.edl:.2f} "
+                 f"rel={r.steps_compression/base.steps_compression:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Table 2: inference speed of baseline / LLMA(single-branch) /
+lookahead-parallel / lookahead-hierarchical across dataset profiles.
+
+Reported: CPU tokens/s (this box), steps-compression (the IO-bound speedup,
+hardware-independent), mean EDL, and v5e-projected tokens/s for a 10B-class
+model (AntGLM row of the paper)."""
+from __future__ import annotations
+
+from repro.core import LookaheadConfig
+
+from .common import (PROFILE_PHASE, bench_model, emit, make_dataset,
+                     run_serving, v5e_projected_tokens_per_s)
+
+METHODS = {
+    "baseline": LookaheadConfig(strategy="none", decoding_length=0),
+    # LLMA w/ output-stream references (prompt-only retrieval finds nothing
+    # on the guided bench model, which does not copy its prompt)
+    "llma": LookaheadConfig(strategy="single", decoding_length=16,
+                            branch_length=16),
+    "la-parallel": LookaheadConfig(strategy="parallel", decoding_length=48,
+                                   branch_length=16),
+    "la-hier": LookaheadConfig(strategy="hierarchical", decoding_length=48,
+                               branch_length=16),
+}
+DATASETS = ["antrag", "dolly", "gsm8k", "humaneval"]
+
+
+def run(n_queries: int = 10, max_new: int = 48) -> None:
+    cfg, params = bench_model()
+    for ds_name in DATASETS:
+        ds = make_dataset(ds_name, n_queries + 4)
+        base = None
+        for m_name, la in METHODS.items():
+            r = run_serving(cfg, params, la, ds[:n_queries + 4],
+                            max_new=max_new, n_queries=n_queries,
+                            phase=PROFILE_PHASE[ds_name],
+                            warm_with_outputs=4)
+            if m_name == "baseline":
+                base = r
+            speedup = r.steps_compression / base.steps_compression
+            proj = v5e_projected_tokens_per_s(cfg, 10.14e9,
+                                              r.steps_compression)
+            emit(f"table2/{ds_name}/{m_name}",
+                 1e6 * r.wall_s / max(r.total_tokens, 1),
+                 f"steps_compression={r.steps_compression:.2f}x "
+                 f"edl={r.edl:.2f} cpu_tok_s={r.tokens_per_s:.1f} "
+                 f"v5e_proj_10b_tok_s={proj:.0f} rel_speedup={speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

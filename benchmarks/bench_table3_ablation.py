@@ -1,0 +1,33 @@
+"""Paper Table 3: trie-updating procedure ablation — w/o prompt branches,
+w/o output branches, w/o pruning, w/o eliminating, vs. full lookahead."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import LookaheadConfig
+
+from .common import bench_model, emit, make_dataset, run_serving
+
+BASE = LookaheadConfig(strategy="hierarchical", decoding_length=32,
+                       branch_length=8)
+VARIANTS = {
+    "full": BASE,
+    "wo_prompt": dataclasses.replace(BASE, insert_prompt=False),
+    "wo_output": dataclasses.replace(BASE, insert_output=False),
+    "wo_pruning": dataclasses.replace(BASE, prune=False),
+    "wo_eliminating": dataclasses.replace(BASE, eliminate=False),
+}
+
+
+def run(n_queries: int = 10, max_new: int = 48) -> None:
+    cfg, params = bench_model()
+    ds = make_dataset("antrag", n_queries + 4)
+    for name, la in VARIANTS.items():
+        r = run_serving(cfg, params, la, ds[4:], max_new=max_new, phase=2,
+                        warm_with_outputs=4, n_queries=n_queries)
+        emit(f"table3/{name}", 1e6 * r.wall_s / max(r.total_tokens, 1),
+             f"steps_compression={r.steps_compression:.2f}x edl={r.edl:.2f}")
+
+
+if __name__ == "__main__":
+    run()

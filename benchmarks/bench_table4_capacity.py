@@ -1,0 +1,48 @@
+"""Paper Table 4: trie node capacity (n × decoding_length) vs speed, plus
+retrieve/update wall times."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import LookaheadConfig
+from repro.core.trie import TrieTree
+from repro.training.data import PROFILES, SyntheticCorpus
+
+from .common import VOCAB, bench_model, emit, make_dataset, run_serving
+
+
+def run(n_queries: int = 8, max_new: int = 48) -> None:
+    cfg, params = bench_model()
+    ds = make_dataset("antrag", n_queries + 4)
+    for factor in (1, 4, 16, 64):
+        la = LookaheadConfig(strategy="hierarchical", decoding_length=32,
+                             branch_length=8, capacity_factor=factor)
+        r = run_serving(cfg, params, la, ds[4:], max_new=max_new, phase=2,
+                        warm_with_outputs=4, n_queries=n_queries)
+        # measure raw trie op latencies at this capacity
+        trie = TrieTree(capacity=la.trie_capacity)
+        corpus = SyntheticCorpus(PROFILES["antrag"], VOCAB, seed=3)
+        for _ in range(30):
+            p, a = corpus.sample()
+            trie.insert_ngrams(a, la.branch_length)
+        ctxs = [corpus.sample()[1][:12] for _ in range(64)]
+        t0 = time.perf_counter()
+        for c in ctxs:
+            trie.retrieve(c, decoding_length=32)
+        retrieve_ms = (time.perf_counter() - t0) / len(ctxs) * 1e3
+        t0 = time.perf_counter()
+        for c in ctxs:
+            trie.insert_ngrams(c, la.branch_length)
+        update_ms = (time.perf_counter() - t0) / len(ctxs) * 1e3
+        emit(f"table4/cap{factor}xDL",
+             1e6 * r.wall_s / max(r.total_tokens, 1),
+             f"steps_compression={r.steps_compression:.2f}x "
+             f"retrieve_ms={retrieve_ms:.3f} update_ms={update_ms:.3f} "
+             f"trie_nodes={len(trie)}")
+
+
+if __name__ == "__main__":
+    run()

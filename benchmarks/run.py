@@ -1,0 +1,54 @@
+"""Benchmark driver — one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table2] [--quick]
+
+Output: ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("table2", "benchmarks.bench_table2"),
+    ("fig45", "benchmarks.bench_fig45_edl"),
+    ("table3", "benchmarks.bench_table3_ablation"),
+    ("table4", "benchmarks.bench_table4_capacity"),
+    ("table5", "benchmarks.bench_table5_memory"),
+    ("table12", "benchmarks.bench_table12_batch"),
+    ("fig1", "benchmarks.bench_fig1_cdl"),
+    ("fig6", "benchmarks.bench_fig6_warmup"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer queries per benchmark")
+    args = ap.parse_args()
+    failures = 0
+    for name, module in BENCHES:
+        if args.only and args.only != name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module)
+            if args.quick and "n_queries" in mod.run.__code__.co_varnames:
+                mod.run(n_queries=4, max_new=32)
+            else:
+                mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: lossless Lookahead decoding on a small LM.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (LookaheadConfig, LookaheadEngine, baseline_config,
+                        reference_decode)
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.session import make_session_fns
+
+
+def main() -> None:
+    cfg = TransformerConfig(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                            d_ff=256, vocab_size=512, max_seq_len=512)
+    params = init_params(cfg, jax.random.key(0))
+    la = LookaheadConfig(decoding_length=32, branch_length=8,
+                         strategy="hierarchical")
+    fns = make_session_fns(cfg, params, slots=la.slots)
+
+    prompt = list(np.random.RandomState(0).randint(2, 512, size=48))
+
+    # ground truth: plain step-by-step greedy decoding
+    ref = reference_decode(fns, prompt, max_new_tokens=64)
+
+    # lookahead: same model functions, trie-driven multi-branch drafts
+    engine = LookaheadEngine(fns, la)
+    engine.warmup([ref])             # e.g. a previous response for this topic
+    out = engine.generate(prompt, max_new_tokens=64)
+
+    assert out.tokens == ref, "lossless property violated!"
+    print(f"output ({len(out.tokens)} tokens): {out.tokens[:16]} ...")
+    print(f"steps: {out.stats.steps}  (baseline would take {len(ref)})")
+    print(f"EDL (tokens/step): {out.stats.edl:.2f}")
+    print(f"steps-compression: {len(ref) / out.stats.steps:.2f}x "
+          f"(= speedup in the IO-bound decode regime)")
+    print("LOSSLESS ✓ — identical to step-by-step greedy decoding")
+
+
+if __name__ == "__main__":
+    main()

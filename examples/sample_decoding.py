@@ -1,0 +1,36 @@
+"""Lossless lookahead under SAMPLING (paper: 'supports the greedy search and
+sample generation strategy').  Position-keyed Gumbel sampling makes the
+sampled stream deterministic given (key, position) — so drafts verify
+against it exactly and the accelerated stream is bit-identical.
+
+    PYTHONPATH=src python examples/sample_decoding.py
+"""
+import jax
+import numpy as np
+
+from repro.core import LookaheadConfig, LookaheadEngine, reference_decode
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.session import make_session_fns
+
+
+def main() -> None:
+    cfg = TransformerConfig(n_layers=3, d_model=96, n_heads=4, n_kv_heads=2,
+                            d_ff=192, vocab_size=256, max_seq_len=512)
+    params = init_params(cfg, jax.random.key(1))
+    for temp in (0.7, 1.0):
+        fns = make_session_fns(cfg, params, sample=True, temperature=temp,
+                               base_key=jax.random.key(123), slots=25)
+        prompt = list(np.random.RandomState(1).randint(2, 256, size=32))
+        ref = reference_decode(fns, prompt, 48)
+        eng = LookaheadEngine(fns, LookaheadConfig(decoding_length=24,
+                                                   branch_length=8))
+        eng.warmup([ref])
+        out = eng.generate(prompt, 48)
+        assert out.tokens == ref
+        print(f"temperature={temp}: {out.stats.steps} steps for "
+              f"{len(out.tokens)} tokens (EDL {out.stats.edl:.2f}) — "
+              "bit-identical to step-by-step sampling ✓")
+
+
+if __name__ == "__main__":
+    main()

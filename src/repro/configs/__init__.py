@@ -1,0 +1,49 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+AntGLM-10B).  Each module exposes
+
+  ARCH            — id string
+  full_config()   — the exact published configuration
+  smoke_config()  — reduced same-family config for CPU smoke tests
+  SHAPES          — list of shape-cell names
+  build_cell(shape, mesh=None)  — (fn, args_abstract, args_logical_axes, meta)
+                    ready for jit(...).lower(*args) under the mesh.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHS: List[str] = [
+    "phi3_mini_3_8b",
+    "qwen2_1_5b",
+    "phi3_medium_14b",
+    "qwen3_moe_30b_a3b",
+    "moonshot_v1_16b_a3b",
+    "equiformer_v2",
+    "wide_deep",
+    "bert4rec",
+    "two_tower_retrieval",
+    "sasrec",
+    "antglm_10b",       # paper's own model (extra, not an assigned cell)
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_arch(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    if mod not in ARCHS:
+        raise KeyError(f"unknown arch {name}; have {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def assigned_cells() -> List[tuple]:
+    """All 40 assigned (arch, shape) cells."""
+    cells = []
+    for a in ARCHS:
+        if a == "antglm_10b":
+            continue
+        m = get_arch(a)
+        for s in m.SHAPES:
+            cells.append((a, s))
+    return cells

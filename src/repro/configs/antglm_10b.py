@@ -1,0 +1,24 @@
+"""AntGLM-10B — the paper's own deployment model (GLM structure [arXiv:
+2103.10360], trained from scratch at Ant).  Paper Table 9: 48L, hidden 4096,
+32 heads, MLP 16384, vocab 115328.  Modeled as a decoder-only with GeGLU
+(GLM's blank-infilling objective is irrelevant for serving-path perf)."""
+from repro.configs import lm_common
+from repro.models.transformer import TransformerConfig
+
+ARCH = "antglm-10b"
+SHAPES = lm_common.SHAPES
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH, n_layers=48, d_model=4096, n_heads=32, n_kv_heads=32,
+        d_ff=16384, vocab_size=115328, head_dim=128, rope_theta=10000.0,
+        act="gelu", tie_embeddings=True)
+
+
+def smoke_config() -> TransformerConfig:
+    return lm_common.smoke_config(full_config())
+
+
+def build_cell(shape: str, mesh=None, fast: bool = False):
+    return lm_common.build_cell(ARCH, full_config(), shape, mesh, fast=fast)

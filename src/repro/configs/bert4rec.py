@@ -1,0 +1,72 @@
+"""bert4rec [arXiv:1904.06690]: embed_dim=64, 2 blocks, 2 heads, seq 200,
+bidirectional cloze.  Encoder-only: serve = full-sequence scoring."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import recsys_common as rc
+from repro.configs.common import Cell, sds
+from repro.models.recsys import bert4rec as model
+
+ARCH = "bert4rec"
+SHAPES = rc.SHAPES
+N_ITEMS = 1_000_000
+
+
+def full_config() -> model.Bert4RecConfig:
+    return model.Bert4RecConfig(n_items=N_ITEMS, embed_dim=64, n_blocks=2,
+                                n_heads=2, seq_len=200)
+
+
+def smoke_config() -> model.Bert4RecConfig:
+    return model.Bert4RecConfig(n_items=500, embed_dim=16, n_blocks=2,
+                                n_heads=2, seq_len=24)
+
+
+def build_cell(shape: str, mesh=None, fast: bool = False) -> Cell:
+    cfg = full_config()
+    B = rc.BATCHES[shape]
+    meta = {"n_params": cfg.n_params(), "n_active_params": cfg.n_params(),
+            "model_flops": _flops(cfg, B, shape), "tokens_per_step":
+            B * cfg.seq_len, "batch": B, "weight_bytes": cfg.n_params() * 4,
+            "bytes_floor": float(B * (cfg.embed_dim * cfg.seq_len * 8) * 4
+                                 * (3 if shape == "train_batch" else 1)
+                                 + (cfg.n_params() * 16
+                                    if shape == "train_batch" else 0))}
+    M, NS = cfg.seq_len // 5, 8192      # cloze slots, shared negatives
+    if shape == "train_batch":
+        batch = {"ids": sds((B, cfg.seq_len), jnp.int32),
+                 "masked_pos": sds((B, M), jnp.int32),
+                 "masked_labels": sds((B, M), jnp.int32),
+                 "negatives": sds((NS,), jnp.int32),
+                 "pad_mask": sds((B, cfg.seq_len), jnp.bool_)}
+        axes = {"ids": ("batch", None), "masked_pos": ("batch", None),
+                "masked_labels": ("batch", None), "negatives": (None,),
+                "pad_mask": ("batch", None)}
+        return rc.train_cell(ARCH, cfg, model.init_params, model.loss,
+                             batch, axes, model.param_logical_axes(cfg), meta)
+    if shape == "retrieval_cand":
+        # B=1 full-catalog (10⁶ candidates) scoring — retrieval stage
+        return rc.serve_cell(
+            ARCH, shape, cfg, model.init_params, model.serve,
+            (sds((B, cfg.seq_len), jnp.int32),
+             sds((B, cfg.seq_len), jnp.bool_)),
+            (("batch", None), ("batch", None)),
+            model.param_logical_axes(cfg), meta)
+    # serve_p99 / serve_bulk: ranking stage — 512 candidates per user
+    C = 512
+    return rc.serve_cell(
+        ARCH, shape, cfg, model.init_params, model.serve,
+        (sds((B, cfg.seq_len), jnp.int32), sds((B, cfg.seq_len), jnp.bool_),
+         sds((B, C), jnp.int32)),
+        (("batch", None), ("batch", None), ("batch", None)),
+        model.param_logical_axes(cfg), meta)
+
+
+def _flops(cfg, B, shape):
+    d, S = cfg.embed_dim, cfg.seq_len
+    blocks = cfg.n_blocks * (8 * d * d * S + 4 * S * S * d + 16 * d * d * S)
+    head = 2 * S * d * cfg.n_items if shape != "train_batch" else \
+        2 * S * d * cfg.n_items
+    f = B * (blocks + head)
+    return f * (3 if shape == "train_batch" else 1)

@@ -1,0 +1,111 @@
+"""Shared cell-building helpers for the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.distributed.sharding import DEFAULT_RULES, named_sharding
+
+
+def sds(shape: Sequence[int], dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def is_abstract_leaf(x) -> bool:
+    return isinstance(x, (jax.ShapeDtypeStruct,)) or hasattr(x, "shape") \
+        and hasattr(x, "dtype") and not isinstance(x, (dict, list, tuple))
+
+
+def tree_shardings(mesh, abs_tree: Any, axes_tree: Any, rules=DEFAULT_RULES):
+    """Map a logical-axes tree (parallel to abs_tree; leaves are tuples of
+    logical names or None) to NamedShardings."""
+
+    def rec(a, ax):
+        if isinstance(a, dict):
+            return {k: rec(a[k], ax[k] if ax is not None else None)
+                    for k in a}
+        if isinstance(a, (list, tuple)) and not hasattr(a, "shape"):
+            vals = [rec(v, ax[i] if ax is not None else None)
+                    for i, v in enumerate(a)]
+            if hasattr(a, "_fields"):
+                return type(a)(*vals)
+            return type(a)(vals)
+        if a is None:
+            return None
+        if isinstance(ax, PartitionSpec):          # raw spec leaf
+            return NamedSharding(mesh, ax)
+        logical = ax if ax is not None else (None,) * len(a.shape)
+        if logical == ():  # scalar
+            logical = (None,) * len(a.shape)
+        return named_sharding(mesh, logical, a.shape, rules)
+
+    return rec(abs_tree, axes_tree)
+
+
+def replicate_axes(abs_tree: Any) -> Any:
+    """All-None logical axes tree matching abs_tree."""
+
+    def rec(a):
+        if isinstance(a, dict):
+            return {k: rec(v) for k, v in a.items()}
+        if isinstance(a, (list, tuple)) and not hasattr(a, "shape"):
+            vals = [rec(v) for v in a]
+            if hasattr(a, "_fields"):
+                return type(a)(*vals)
+            return type(a)(vals)
+        if a is None:
+            return None
+        return (None,) * len(a.shape)
+
+    return rec(abs_tree)
+
+
+def pad_to_multiple(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def tree_tangent_axes(axes: Any) -> Any:
+    return axes  # gradients/moments share parameter logical axes
+
+
+def opt_state_axes(param_axes: Any):
+    """Logical axes for AdamWState(step, mu, nu)."""
+    from repro.training.optimizer import AdamWState
+    return AdamWState(step=(), mu=param_axes, nu=param_axes)
+
+
+class Cell:
+    """One (arch × shape) dry-run cell."""
+
+    def __init__(self, arch: str, shape: str, kind: str, fn: Callable,
+                 args: Tuple, axes: Tuple, meta: Optional[Dict] = None,
+                 donate: Tuple[int, ...] = (), rules=None):
+        self.arch = arch
+        self.shape = shape
+        self.kind = kind          # train | decode | prefill | score
+        self.fn = fn
+        self.args = args
+        self.axes = axes
+        self.meta = meta or {}
+        self.donate = donate
+        self.rules = rules or DEFAULT_RULES
+
+    def donatable_bytes(self) -> int:
+        """Bytes of donated args (aliased in/out on TPU; XLA CPU ignores
+        donation, so memory_analysis double-counts them — subtracted in the
+        dry-run 'fits' accounting)."""
+        tot = 0
+        for i in self.donate:
+            for leaf in jax.tree.leaves(self.args[i]):
+                if hasattr(leaf, "shape"):
+                    tot += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        return tot
+
+    def shardings(self, mesh, rules=DEFAULT_RULES):
+        return tuple(tree_shardings(mesh, a, x, rules)
+                     for a, x in zip(self.args, self.axes))

@@ -1,0 +1,118 @@
+"""equiformer-v2 [arXiv:2306.12059]: 12 layers, 128 sphere channels,
+l_max=6, m_max=2, 8 heads, SO(2)-eSCN convolutions.
+
+Cells: full_graph_sm (Cora-like 2,708/10,556 d=1433), minibatch_lg
+(Reddit-like sampled subgraph, fanout 15-10 from batch_nodes=1024),
+ogb_products (2,449,029/61,859,140 d=100), molecule (128×30-node graphs).
+Positions for the non-geometric graphs are synthetic (see DESIGN.md)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import Cell, opt_state_axes, pad_to_multiple, sds
+from repro.models.gnn import equiformer as model
+from repro.training.optimizer import adamw_init
+from repro.training.train_step import make_train_step
+
+ARCH = "equiformer-v2"
+SHAPES = ["full_graph_sm", "minibatch_lg", "ogb_products", "molecule"]
+
+# (n_nodes, n_edges_padded, d_feat, n_out, node_level, edge_chunk)
+CELLS = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=pad_to_multiple(10556, 512),
+                          d_feat=1433, n_out=7, node_level=True,
+                          edge_chunk=0),
+    # sampled subgraph caps for batch_nodes=1024, fanout 15-10
+    # dense edge path: 169k edges sharded over 512 chips = 330/chip; the
+    # chunked path's scan CARRY (the (N,lsq,C) accumulator) would be saved
+    # per chunk by backward — 32×4.3GiB — so chunking is strictly worse
+    # under edge sharding (measured; see EXPERIMENTS.md §Perf).
+    "minibatch_lg": dict(n_nodes=1024 + 1024 * 15 + 1024 * 150,
+                         n_edges=1024 * 15 + 1024 * 15 * 10,
+                         d_feat=602, n_out=41, node_level=True,
+                         edge_chunk=0),
+    "ogb_products": dict(n_nodes=pad_to_multiple(2_449_029, 512),
+                         n_edges=pad_to_multiple(61_859_140, 512),
+                         d_feat=100, n_out=47, node_level=True,
+                         edge_chunk=120832),
+    "molecule": dict(n_nodes=128 * 30, n_edges=128 * 64, d_feat=64,
+                     n_out=1, node_level=False, edge_chunk=0,
+                     n_graphs=128),
+}
+
+
+def full_config(shape: str = "molecule", fast: bool = False) -> model.EquiformerConfig:
+    c = CELLS[shape]
+    return model.EquiformerConfig(
+        n_layers=12, channels=128, l_max=6, m_max=2, n_heads=8,
+        d_feat_in=c["d_feat"], n_rbf=32, n_out=c["n_out"],
+        node_level=c["node_level"], edge_chunk=c["edge_chunk"],
+        scan_layers=fast, remat=True, dtype="bfloat16")
+
+
+def smoke_config() -> model.EquiformerConfig:
+    return model.EquiformerConfig(n_layers=2, channels=16, l_max=2, m_max=1,
+                                  n_heads=4, d_feat_in=8, n_rbf=8, n_out=3)
+
+
+def build_cell(shape: str, mesh=None, fast: bool = False) -> Cell:
+    c = CELLS[shape]
+    cfg = full_config(shape, fast=fast)
+    N, E = c["n_nodes"], c["n_edges"]
+    batch = {"node_feat": sds((N, c["d_feat"]), jnp.float32),
+             "positions": sds((N, 3), jnp.float32),
+             "edges": sds((E, 2), jnp.int32),
+             "edge_mask": sds((E,), jnp.bool_)}
+    axes = {"node_feat": (None, None), "positions": (None, None),
+            "edges": ("edges", None), "edge_mask": ("edges",)}
+    if shape == "molecule":
+        batch["graph_ids"] = sds((N,), jnp.int32)
+        batch["energies"] = sds((c["n_graphs"],), jnp.float32)
+        axes["graph_ids"] = (None,)
+        axes["energies"] = (None,)
+        loss = model.energy_loss
+    else:
+        batch["labels"] = sds((N,), jnp.int32)
+        axes["labels"] = (None,)
+        loss = model.node_class_loss
+    params = jax.eval_shape(lambda k: model.init_params(cfg, k), jax.random.key(0))
+    opt = jax.eval_shape(adamw_init, params)
+    step = make_train_step(lambda p, b: loss(cfg, p, b), lr=3e-4,
+                           grad_dtype="bfloat16")
+    p_axes = model.param_logical_axes(cfg)
+    meta = {"n_params": cfg.n_params(), "n_active_params": cfg.n_params(),
+            "model_flops": _flops(cfg, E), "tokens_per_step": N,
+            "batch": N, "weight_bytes": cfg.n_params() * 4,
+            "n_edges": E,
+            # train floor: param streams + per-edge message traffic (rotate
+            # in/out + SO(2) in/out, fwd + remat + bwd ≈ x4)
+            "bytes_floor": float(cfg.n_params() * 16
+                                 + cfg.n_layers * E * cfg.lsq * cfg.channels
+                                 * 2 * 6 * 4
+                                 + cfg.n_layers * N * cfg.lsq * cfg.channels
+                                 * 2 * 8)}
+    if cfg.edge_chunk and E > cfg.edge_chunk:
+        # edge-chunk lax.scan body counted once by cost_analysis: add the
+        # missing (nc-1)/nc of the per-edge message work (×4/3 converts the
+        # fwd-only per-edge estimate to remat'd fwd+bwd)
+        nc = E // cfg.edge_chunk
+        fwd = _flops(cfg, E) / 3
+        meta["flops_correction"] = (nc - 1) / nc * fwd * 4
+        meta["bytes_correction"] = (nc - 1) / nc * (
+            4.0 * E * cfg.lsq * cfg.channels * 2 * 6)
+    return Cell(ARCH, shape, "train", step,
+                (params, opt, batch),
+                (p_axes, opt_state_axes(p_axes), axes), meta, donate=(0, 1))
+
+
+
+def _flops(cfg, E):
+    # dominant: per-edge Wigner rotate (2×lsq²·C) + SO(2) conv
+    C, L = cfg.channels, cfg.l_max
+    rot = 2 * 2 * cfg.lsq * cfg.lsq * C
+    so2 = 2 * (2 * (L + 1) * C) * ((L + 1) * C)
+    for m in range(1, cfg.m_max + 1):
+        nl = L + 1 - m
+        so2 += 2 * 2 * (2 * nl * C) * (nl * C)
+    return cfg.n_layers * E * (rot + so2) * 3   # ×3 for fwd+bwd

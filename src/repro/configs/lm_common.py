@@ -1,0 +1,234 @@
+"""Shared cell builders for the LM-family transformers.
+
+Shapes (assignment):
+  train_4k     seq 4096,   global_batch 256   → train_step
+  prefill_32k  seq 32768,  global_batch 32    → prefill (KV-cache fill)
+  decode_32k   seq 32768,  global_batch 128   → serve_step (lookahead tree,
+                                                1+64 slots, KV cache 32k)
+  long_500k    seq 524288, global_batch 1     → serve_step, sequence-parallel
+                                                flash-decode KV sharding
+
+Decode cells lower the *lookahead* serve step (the paper's technique is the
+first-class serving path); T=65 slots = 1 root + decoding_length 64.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import Cell, opt_state_axes, replicate_axes, sds
+from repro.models import transformer as tx
+from repro.serving.sampler import choose_tokens
+from repro.training.optimizer import adamw_init
+from repro.training.train_step import make_train_step
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+LA_SLOTS = 65              # 1 + decoding_length(64); ≤ CDL (paper Fig. 1)
+
+
+def smoke_config(base: tx.TransformerConfig) -> tx.TransformerConfig:
+    """Reduced same-family config: keeps GQA ratio / bias / MoE topology."""
+    kv = max(1, base.n_kv_heads * 4 // base.n_heads)
+    return dataclasses.replace(
+        base, n_layers=2, d_model=64, n_heads=4, n_kv_heads=kv,
+        d_ff=128 if not base.moe else 0, vocab_size=512, head_dim=16,
+        max_seq_len=128, q_chunk=0, remat=False, dtype="float32",
+        param_dtype="float32",
+        n_experts=8 if base.moe else 0, top_k=min(base.top_k, 2),
+        moe_d_ff=32 if base.moe else 0,
+        n_shared_experts=min(base.n_shared_experts, 1), moe_impl="ref")
+
+
+def _serve_fn(cfg: tx.TransformerConfig):
+    def serve_step(params, cache, cache_lens, tokens, pos, mask):
+        cache, logits = tx.tree_step(cfg, params, cache, cache_lens, tokens,
+                                     pos, mask)
+        return cache, choose_tokens(logits, pos + 1)
+    return serve_step
+
+
+def _prefill_fn(cfg: tx.TransformerConfig):
+    def prefill_step(params, tokens, lens, cache):
+        return tx.prefill(cfg, params, tokens, lens, cache)
+    return prefill_step
+
+
+def _attn_scan_correction(cfg, B, S, kind) -> Dict[str, float]:
+    """The q-chunked attention is a lax.scan; XLA cost_analysis counts while
+    bodies ONCE, so add the missing (n_chunks-1)/n_chunks share analytically
+    (documented in EXPERIMENTS.md §Dry-run).  Returns TOTAL (all-chip) flops
+    and bytes to add."""
+    if not cfg.q_chunk or S <= cfg.q_chunk:
+        return {"flops_correction": 0.0, "bytes_correction": 0.0}
+    nc = S // cfg.q_chunk
+    H, dh, K = cfg.n_heads, cfg.dh, cfg.n_kv_heads
+    attn_flops = 4.0 * B * H * S * S * dh          # scores + weighted sum
+    score_bytes = 2.0 * B * H * S * S * 2 * 2      # write+read scores (f32→2B bf16 eff.)
+    kv_bytes = 2.0 * B * S * K * dh * 2 * nc       # K,V re-read per chunk
+    mult = 4.0 if kind == "train" else 1.0         # remat fwd+recompute+bwd
+    frac = (nc - 1) / nc
+    return {"flops_correction": cfg.n_layers * mult * frac * attn_flops,
+            "bytes_correction": cfg.n_layers * mult * frac
+            * (score_bytes + kv_bytes)}
+
+
+def _perf_overrides(cfg: tx.TransformerConfig) -> tx.TransformerConfig:
+    """§Perf hillclimb hook: REPRO_PERF_OVERRIDES="k=v,k=v" patches the
+    dry-run config (e.g. attn_score_f32=0, q_chunk=2048)."""
+    import os
+    ov = os.environ.get("REPRO_PERF_OVERRIDES", "")
+    if not ov:
+        return cfg
+    kw = {}
+    for item in ov.split(","):
+        k, v = item.split("=")
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            kw[k] = v not in ("0", "false", "False")
+        elif isinstance(cur, int):
+            kw[k] = int(v)
+        elif isinstance(cur, float):
+            kw[k] = float(v)
+        else:
+            kw[k] = v
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_cell(arch: str, base: tx.TransformerConfig, shape: str,
+               mesh=None, fast: bool = False) -> Cell:
+    # fast=True keeps lax.scan over layers (quick compile; multi-pod leg);
+    # fast=False unrolls for accurate cost_analysis (roofline leg).
+    key = jax.random.key(0)
+    if shape == "train_4k":
+        cfg = dataclasses.replace(base, dtype="bfloat16", remat=True,
+                                  q_chunk=512, max_seq_len=4096,
+                                  moe_impl="auto", scan_layers=fast)
+        cfg = _perf_overrides(cfg)
+        B, S = 256, 4096
+        params = jax.eval_shape(lambda k: tx.init_params(cfg, k), key)
+        opt = jax.eval_shape(adamw_init, params)
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        loss = lambda p, b: tx.lm_loss(cfg, p, b["tokens"], b["labels"])
+        # memory-truth (fast/scan) build runs 2 microbatches — halves the
+        # activation temp; cost-truth (unrolled) build keeps accum=1 so the
+        # per-step cost analysis covers the full global batch exactly.
+        step = make_train_step(loss, lr=3e-4, grad_dtype="bfloat16",
+                               accum_steps=4 if fast else 1)
+        p_axes = tx.param_logical_axes(cfg)
+        axes = (p_axes, opt_state_axes(p_axes),
+                {"tokens": ("batch", None), "labels": ("batch", None)})
+        meta = _meta(cfg, tokens_per_step=B * S, kind="train", seq=S, batch=B)
+        meta.update(_attn_scan_correction(cfg, B, S, "train"))
+        from repro.distributed.sharding import DEFAULT_RULES
+        # Megatron-SP-style: remat-saved residual stream sharded over model
+        rules = DEFAULT_RULES.override(residual_seq=("model",))
+        return Cell(arch, shape, "train", step, (params, opt, batch), axes,
+                    meta, donate=(0, 1), rules=rules)
+
+    if shape == "prefill_32k":
+        cfg = dataclasses.replace(base, dtype="bfloat16",
+                                  param_dtype="bfloat16", q_chunk=1024,
+                                  max_seq_len=32768, moe_impl="auto",
+                                  scan_layers=fast)
+        cfg = _perf_overrides(cfg)
+        B, S = 32, 32768
+        params = jax.eval_shape(lambda k: tx.init_params(cfg, k), key)
+        # cache=None: the stacked per-layer KV IS the returned cache —
+        # no second cache-sized buffer.
+        args = (params, {"tokens": sds((B, S), jnp.int32)},
+                sds((B,), jnp.int32))
+        fn = lambda p, b, l: _prefill_fn(cfg)(p, b["tokens"], l, None)
+        axes = (tx.param_logical_axes(cfg), {"tokens": ("batch", None)},
+                ("batch",))
+        meta = _meta(cfg, tokens_per_step=B * S, kind="prefill", seq=S,
+                     batch=B)
+        meta.update(_attn_scan_correction(cfg, B, S, "prefill"))
+        return Cell(arch, shape, "prefill", fn, args, axes, meta)
+
+    if shape in ("decode_32k", "long_500k"):
+        long = shape == "long_500k"
+        # flash_decode for BOTH decode cells: shards the KV sequence over
+        # whatever mesh axes batch/heads cannot absorb (see
+        # distributed/flash_decode._derive_axes).
+        cfg = dataclasses.replace(
+            base, dtype="bfloat16", param_dtype="bfloat16",
+            max_seq_len=524288 if long else 32768,
+            decode_attn="flash_decode",
+            moe_impl="auto", scan_layers=fast)
+        cfg = _perf_overrides(cfg)
+        B = 1 if long else 128
+        T = LA_SLOTS
+        params = jax.eval_shape(lambda k: tx.init_params(cfg, k), key)
+        cache = jax.eval_shape(lambda: tx.init_cache(cfg, B, jnp.bfloat16))
+        if mesh is not None:
+            from repro.distributed.flash_decode import cache_partition_spec
+            cspec = cache_partition_spec(mesh, B, cfg.max_seq_len,
+                                         cfg.n_kv_heads, cfg.n_heads)
+            cache_axes = {"k": cspec, "v": cspec}
+        else:
+            cache_axes = tx.cache_logical_axes(cfg)
+        args = (params, cache, sds((B,), jnp.int32), sds((B, T), jnp.int32),
+                sds((B, T), jnp.int32), sds((B, T, T), jnp.bool_))
+        axes = (tx.param_logical_axes(cfg), cache_axes,
+                ("batch",), ("batch", None), ("batch", None),
+                ("batch", None, None))
+        meta = _meta(cfg, tokens_per_step=B * T, kind="decode",
+                     seq=cfg.max_seq_len, batch=B)
+        # §Perf iteration 1 (decode): serve weights are bf16 and fit at
+        # TP=16, so fsdp-sharding them only buys per-layer weight
+        # all-gathers AND forces the unembed to contract over a sharded d —
+        # a (B,T,V) f32 all-reduce over `data` (~0.6 GiB/chip/step measured).
+        # Dropping fsdp for serve cells removes both.
+        # REPRO_SERVE_FSDP=1 restores the iteration-0 baseline.
+        import os
+        from repro.distributed.sharding import DEFAULT_RULES
+        rules = DEFAULT_RULES if os.environ.get("REPRO_SERVE_FSDP") \
+            else DEFAULT_RULES.override(fsdp=())
+        return Cell(arch, shape, "decode", _serve_fn(cfg), args, axes, meta,
+                    donate=(1,), rules=rules)
+
+    raise KeyError(shape)
+
+
+def _meta(cfg: tx.TransformerConfig, tokens_per_step: int, kind: str,
+          seq: int, batch: int) -> Dict:
+    n = cfg.n_params()
+    na = cfg.n_active_params()
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    K, dh = cfg.n_kv_heads, cfg.dh
+    T = tokens_per_step // batch
+    # analytic TPU-facing HBM floor (XLA CPU legalizes bf16->f32 and inflates
+    # cost_analysis bytes ~3-5x — measured; see EXPERIMENTS.md §Dry-run):
+    if kind == "decode":
+        floor = (n * 2                                  # weight stream (bf16)
+                 + L * 2 * K * dh * seq * batch * 2     # KV cache read
+                 + batch * T * V * 4                    # logits f32
+                 + L * batch * T * d * 2 * 10)          # residual stream
+    elif kind == "prefill":
+        floor = (n * 2
+                 + L * 2 * K * dh * batch * seq * 2 * 2  # KV write+read
+                 + L * batch * seq * d * 2 * 12
+                 + batch * V * 4)
+    else:  # train
+        floor = (na * 16                                 # p/g/m/v f32 streams
+                 + L * batch * seq * d * 2 * 30          # fwd+bwd activations
+                 + batch * seq * V * 4 * 3)              # logits + bwd
+    return {
+        "bytes_floor": float(floor),
+        "n_params": n,
+        "n_active_params": na,
+        # MODEL_FLOPS: 6·N_active·D tokens (train fwd+bwd);
+        # decode/prefill fwd-only → 2·N_active·D (+ attention term separately)
+        "model_flops": (6 if kind == "train" else 2) * na * tokens_per_step,
+        "tokens_per_step": tokens_per_step,
+        "seq": seq,
+        "batch": batch,
+        "weight_bytes": (n if kind != "train" else na) * (4 if kind == "train" else 2),
+        "kv_bytes_per_step": (cfg.n_layers * 2 * cfg.n_kv_heads * cfg.dh
+                              * seq * batch * 2 if kind == "decode" else 0),
+    }

@@ -1,0 +1,39 @@
+"""Shared cell builders for the recsys archs.
+
+Shapes (assignment): train_batch 65,536 · serve_p99 512 · serve_bulk 262,144
+· retrieval_cand (batch=1 vs 1,000,000 candidates).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import Cell, opt_state_axes, sds
+from repro.training.optimizer import adamw_init
+from repro.training.train_step import make_train_step
+
+SHAPES = ["train_batch", "serve_p99", "serve_bulk", "retrieval_cand"]
+BATCHES = {"train_batch": 65536, "serve_p99": 512, "serve_bulk": 262144,
+           "retrieval_cand": 1}
+
+
+def train_cell(arch: str, cfg, init_fn: Callable, loss_fn: Callable,
+               batch_abs: Dict, batch_axes: Dict, p_axes, meta: Dict) -> Cell:
+    params = jax.eval_shape(lambda k: init_fn(cfg, k), jax.random.key(0))
+    opt = jax.eval_shape(adamw_init, params)
+    step = make_train_step(lambda p, b: loss_fn(cfg, p, b), lr=1e-3,
+                           grad_dtype="bfloat16")
+    axes = (p_axes, opt_state_axes(p_axes), batch_axes)
+    return Cell(arch, "train_batch", "train", step, (params, opt, batch_abs),
+                axes, meta, donate=(0, 1))
+
+
+def serve_cell(arch: str, shape: str, cfg, init_fn: Callable,
+               serve_fn: Callable, in_abs: tuple, in_axes: tuple, p_axes,
+               meta: Dict) -> Cell:
+    params = jax.eval_shape(lambda k: init_fn(cfg, k), jax.random.key(0))
+    fn = lambda p, *a: serve_fn(cfg, p, *a)
+    return Cell(arch, shape, "score", fn, (params,) + in_abs,
+                (p_axes,) + in_axes, meta)

@@ -1,0 +1,66 @@
+"""sasrec [arXiv:1808.09781]: embed_dim=50, 2 blocks, 1 head, seq 50,
+causal self-attention, next-item objective."""
+import jax.numpy as jnp
+
+from repro.configs import recsys_common as rc
+from repro.configs.common import Cell, sds
+from repro.models.recsys import sasrec as model
+
+ARCH = "sasrec"
+SHAPES = rc.SHAPES
+N_ITEMS = 1_000_000
+
+
+def full_config() -> model.SasRecConfig:
+    # embed_dim 50 padded to 52 (heads=1; keep d%4==0 for TPU lanes)
+    return model.SasRecConfig(n_items=N_ITEMS, embed_dim=52, n_blocks=2,
+                              n_heads=1, seq_len=50)
+
+
+def smoke_config() -> model.SasRecConfig:
+    return model.SasRecConfig(n_items=300, embed_dim=16, n_blocks=2,
+                              n_heads=1, seq_len=12)
+
+
+def build_cell(shape: str, mesh=None, fast: bool = False) -> Cell:
+    cfg = full_config()
+    B = rc.BATCHES[shape]
+    meta = {"n_params": cfg.n_params(), "n_active_params": cfg.n_params(),
+            "model_flops": _flops(cfg, B, shape),
+            "tokens_per_step": B * cfg.seq_len, "batch": B,
+            "weight_bytes": cfg.n_params() * 4,
+            "bytes_floor": float(B * (cfg.embed_dim * cfg.seq_len * 8) * 4
+                                 * (3 if shape == "train_batch" else 1)
+                                 + (cfg.n_params() * 16
+                                    if shape == "train_batch" else 0))}
+    NS = 8192                            # shared negatives
+    if shape == "train_batch":
+        batch = {"ids": sds((B, cfg.seq_len), jnp.int32),
+                 "labels": sds((B, cfg.seq_len), jnp.int32),
+                 "negatives": sds((NS,), jnp.int32),
+                 "pad_mask": sds((B, cfg.seq_len), jnp.bool_)}
+        axes = {"ids": ("batch", None), "labels": ("batch", None),
+                "negatives": (None,), "pad_mask": ("batch", None)}
+        return rc.train_cell(ARCH, cfg, model.init_params, model.loss,
+                             batch, axes, model.param_logical_axes(cfg), meta)
+    if shape == "retrieval_cand":
+        return rc.serve_cell(
+            ARCH, shape, cfg, model.init_params, model.serve,
+            (sds((B, cfg.seq_len), jnp.int32),
+             sds((B, cfg.seq_len), jnp.bool_)),
+            (("batch", None), ("batch", None)),
+            model.param_logical_axes(cfg), meta)
+    C = 512
+    return rc.serve_cell(
+        ARCH, shape, cfg, model.init_params, model.serve,
+        (sds((B, cfg.seq_len), jnp.int32), sds((B, cfg.seq_len), jnp.bool_),
+         sds((B, C), jnp.int32)),
+        (("batch", None), ("batch", None), ("batch", None)),
+        model.param_logical_axes(cfg), meta)
+
+
+def _flops(cfg, B, shape):
+    d, S = cfg.embed_dim, cfg.seq_len
+    blocks = cfg.n_blocks * (8 * d * d * S + 4 * S * S * d + 16 * d * d * S)
+    head = 2 * S * d * cfg.n_items
+    return B * (blocks + head) * (3 if shape == "train_batch" else 1)

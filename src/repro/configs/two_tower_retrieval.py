@@ -1,0 +1,71 @@
+"""two-tower-retrieval [RecSys'19 YouTube]: embed_dim=256, towers
+1024-512-256, dot interaction, sampled softmax; retrieval scores 1M
+candidates via sharded batched-dot + top-k."""
+import jax.numpy as jnp
+
+from repro.configs import recsys_common as rc
+from repro.configs.common import Cell, sds
+from repro.models.recsys import two_tower as model
+
+ARCH = "two-tower-retrieval"
+SHAPES = rc.SHAPES
+N_CAND = 1_000_000
+
+
+def full_config() -> model.TwoTowerConfig:
+    return model.TwoTowerConfig(embed_dim=256, feat_dim=64,
+                                n_user_fields=8, n_item_fields=4,
+                                rows_per_table=1_000_000,
+                                tower_dims=(1024, 512, 256))
+
+
+def smoke_config() -> model.TwoTowerConfig:
+    return model.TwoTowerConfig(embed_dim=16, feat_dim=8, n_user_fields=3,
+                                n_item_fields=2, rows_per_table=256,
+                                tower_dims=(32, 16))
+
+
+def build_cell(shape: str, mesh=None, fast: bool = False) -> Cell:
+    cfg = full_config()
+    B = rc.BATCHES[shape]
+    meta = {"n_params": cfg.n_params(), "n_active_params": cfg.n_params(),
+            "model_flops": _flops(cfg, B, shape), "tokens_per_step": B,
+            "batch": B, "weight_bytes": cfg.n_params() * 4}
+    if shape == "train_batch":
+        batch = {"user_ids": sds((B, cfg.n_user_fields), jnp.int32),
+                 "item_ids": sds((B, cfg.n_item_fields), jnp.int32)}
+        axes = {"user_ids": ("batch", None), "item_ids": ("batch", None)}
+        return rc.train_cell(ARCH, cfg, model.init_params, model.loss,
+                             batch, axes, model.param_logical_axes(cfg), meta)
+    if shape == "retrieval_cand":
+        serve = lambda c, p, u, cand: model.score_candidates(c, p, u, cand,
+                                                             k=128)
+        return rc.serve_cell(
+            ARCH, shape, cfg, model.init_params, serve,
+            (sds((1, cfg.n_user_fields), jnp.int32),
+             sds((N_CAND, cfg.tower_dims[-1]), jnp.float32)),
+            ((None, None), ("candidates", None)),
+            model.param_logical_axes(cfg), meta)
+    # serve_p99 / serve_bulk: paired user·item scoring
+    def serve(c, p, u, it):
+        q = model.user_embed(c, p, u)
+        e = model.item_embed(c, p, it)
+        return jnp.sum(q * e, axis=-1)
+    return rc.serve_cell(
+        ARCH, shape, cfg, model.init_params, serve,
+        (sds((B, cfg.n_user_fields), jnp.int32),
+         sds((B, cfg.n_item_fields), jnp.int32)),
+        (("batch", None), ("batch", None)),
+        model.param_logical_axes(cfg), meta)
+
+
+def _flops(cfg, B, shape):
+    ud = (cfg.n_user_fields * cfg.feat_dim,) + cfg.tower_dims
+    it = (cfg.n_item_fields * cfg.feat_dim,) + cfg.tower_dims
+    t = sum(2 * a * b for a, b in zip(ud[:-1], ud[1:])) \
+        + sum(2 * a * b for a, b in zip(it[:-1], it[1:]))
+    if shape == "train_batch":
+        return B * (t * 3 + 2 * B * cfg.tower_dims[-1])
+    if shape == "retrieval_cand":
+        return t + 2 * N_CAND * cfg.tower_dims[-1]
+    return B * t

@@ -1,0 +1,71 @@
+"""wide-deep [arXiv:1606.07792]: 40 sparse fields, embed_dim=32,
+MLP 1024-512-256, concat interaction.  Tables: 1M rows/field."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import recsys_common as rc
+from repro.configs.common import Cell, sds
+from repro.models.recsys import wide_deep as model
+
+ARCH = "wide-deep"
+SHAPES = rc.SHAPES
+
+
+def full_config() -> model.WideDeepConfig:
+    return model.WideDeepConfig(n_sparse=40, embed_dim=32,
+                                rows_per_table=1_000_000, multi_hot=4,
+                                mlp_dims=(1024, 512, 256), n_dense=13)
+
+
+def smoke_config() -> model.WideDeepConfig:
+    return model.WideDeepConfig(n_sparse=6, embed_dim=8, rows_per_table=512,
+                                multi_hot=3, mlp_dims=(32, 16), n_dense=5)
+
+
+def _batch_abs(cfg, B):
+    return {"sparse_ids": sds((B, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+            "sparse_mask": sds((B, cfg.n_sparse, cfg.multi_hot), jnp.bool_),
+            "dense": sds((B, cfg.n_dense), jnp.float32),
+            "labels": sds((B,), jnp.float32)}
+
+
+def _batch_axes():
+    return {"sparse_ids": ("batch", None, None),
+            "sparse_mask": ("batch", None, None), "dense": ("batch", None),
+            "labels": ("batch",)}
+
+
+def build_cell(shape: str, mesh=None, fast: bool = False) -> Cell:
+    cfg = full_config()
+    B = rc.BATCHES[shape]
+    if shape == "retrieval_cand":
+        B = 1_000_000       # scoring 1M candidate contexts for one user
+    mult = 3 if shape == "train_batch" else 1
+    meta = {"n_params": cfg.n_params(), "n_active_params": cfg.n_params(),
+            "model_flops": _flops(cfg, B, train=(shape == "train_batch")),
+            "tokens_per_step": B, "batch": B,
+            "weight_bytes": cfg.n_params() * 4,
+            "bytes_floor": float(
+                B * cfg.n_sparse * cfg.multi_hot * cfg.embed_dim * 4 * mult
+                + B * sum(cfg.mlp_dims) * 4 * mult
+                + (cfg.n_params() * 16 if mult == 3 else 0))}
+    if shape == "train_batch":
+        return rc.train_cell(ARCH, cfg, model.init_params, model.loss,
+                             _batch_abs(cfg, B), _batch_axes(),
+                             model.param_logical_axes(cfg), meta)
+    serve = lambda c, p, ids, m, d: model.forward(c, p, ids, m, d)
+    return rc.serve_cell(
+        ARCH, shape, cfg, model.init_params, serve,
+        (sds((B, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+         sds((B, cfg.n_sparse, cfg.multi_hot), jnp.bool_),
+         sds((B, cfg.n_dense), jnp.float32)),
+        (("batch", None, None), ("batch", None, None), ("batch", None)),
+        model.param_logical_axes(cfg), meta)
+
+
+def _flops(cfg, B, train):
+    dims = (cfg.n_sparse * cfg.embed_dim + cfg.n_dense,) + cfg.mlp_dims
+    mlp = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    per = mlp + cfg.n_sparse * cfg.multi_hot * cfg.embed_dim * 2
+    return B * per * (3 if train else 1)

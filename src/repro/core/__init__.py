@@ -1,0 +1,14 @@
+"""Lookahead core: trie-based lossless multi-branch speculative decoding."""
+from .draft import BUILDERS, DraftTree, build_hierarchical, build_parallel, build_single
+from .engine import GenStats, LookaheadEngine, RequestResult, StepFns, reference_decode
+from .single_branch import baseline_config, llma_config
+from .strategies import LookaheadConfig
+from .trie import TrieTree
+from .verify import verify_accept, verify_accept_batch
+
+__all__ = [
+    "BUILDERS", "DraftTree", "build_hierarchical", "build_parallel",
+    "build_single", "GenStats", "LookaheadEngine", "RequestResult", "StepFns",
+    "reference_decode", "baseline_config", "llma_config", "LookaheadConfig",
+    "TrieTree", "verify_accept", "verify_accept_batch",
+]

@@ -1,0 +1,173 @@
+"""Hierarchical / parallel / single-branch draft construction (paper §4.2).
+
+Converts retrieved trie branches into the fixed-shape tensors a jitted
+tree-decode step consumes:
+
+  slot 0                : the last committed token (the "root"),
+  slots 1..decoding_len : draft tokens arranged as a tree,
+  parent[i]             : slot index of i's parent (root's parent = -1),
+  depth[i]              : tree depth (0 for root) → position_id offset,
+  tree_mask[i, j]       : 1 iff j is an ancestor of i or j == i.
+
+Three strategies (paper Figure 2/3):
+  * hierarchical — shared prefixes merged (one trie node = one slot),
+  * parallel     — branches laid out independently (no prefix sharing),
+  * single       — one branch only (LLMA-style baseline).
+
+All outputs are padded to a fixed ``1 + decoding_length`` so the device step
+compiles once.  Padded slots have ``parent = 0``, ``token = pad_id``, mask =
+self+root only, and are never matched during verification (they are excluded
+via ``n_slots``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class DraftTree:
+    """Host-side draft tree, ready to be shipped to the device step."""
+    tokens: np.ndarray      # (T,) int32  — slot 0 = root token
+    parent: np.ndarray      # (T,) int32  — -1 for root, else parent slot
+    depth: np.ndarray       # (T,) int32  — 0 for root
+    tree_mask: np.ndarray   # (T, T) bool — ancestor-closure (incl. self)
+    n_slots: int            # live slots (<= T), root included
+    children: List[List[int]]  # adjacency (host verification walk)
+
+    @property
+    def size(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def _finalize(tokens: List[int], parent: List[int], total: int,
+              pad_id: int) -> DraftTree:
+    n = len(tokens)
+    assert n >= 1 and n <= total, (n, total)
+    tok = np.full((total,), pad_id, dtype=np.int32)
+    par = np.zeros((total,), dtype=np.int32)
+    tok[:n] = np.asarray(tokens, dtype=np.int32)
+    par[:n] = np.asarray(parent, dtype=np.int32)
+    par[0] = -1
+    depth = np.zeros((total,), dtype=np.int32)
+    for i in range(1, n):
+        depth[i] = depth[par[i]] + 1
+    # padded slots: children of root at depth 1 (harmless, never verified)
+    depth[n:] = 1
+    mask = np.zeros((total, total), dtype=bool)
+    for i in range(total):
+        mask[i, i] = True
+        j = par[i] if i < n else 0
+        while j >= 0:
+            mask[i, j] = True
+            j = par[j] if j > 0 else -1
+    children: List[List[int]] = [[] for _ in range(total)]
+    for i in range(1, n):
+        children[par[i]].append(i)
+    return DraftTree(tokens=tok, parent=par, depth=depth, tree_mask=mask,
+                     n_slots=n, children=children)
+
+
+def build_hierarchical(root_token: int, branches: Sequence[Sequence[int]],
+                       scores: Optional[Sequence[float]],
+                       decoding_length: int, pad_id: int = 0) -> DraftTree:
+    """Merge shared prefixes: one slot per distinct trie node (paper §4.2.2).
+
+    ``branches`` are root-paths from retrieval (may be prefixes of each
+    other); insertion order respects ``scores`` (already sorted by retrieval).
+    Token budget: at most ``decoding_length`` draft slots beyond the root.
+    """
+    total = 1 + decoding_length
+    tokens: List[int] = [int(root_token)]
+    parent: List[int] = [-1]
+    # map path-prefix -> slot
+    slot_of: Dict[Tuple[int, ...], int] = {(): 0}
+    order = range(len(branches))
+    for bi in order:
+        path = tuple(int(t) for t in branches[bi])
+        for d in range(len(path)):
+            key = path[:d + 1]
+            if key in slot_of:
+                continue
+            if len(tokens) >= total:
+                break
+            parent_slot = slot_of.get(key[:-1])
+            if parent_slot is None:
+                break  # budget cut the prefix earlier; skip the tail
+            slot_of[key] = len(tokens)
+            tokens.append(key[-1])
+            parent.append(parent_slot)
+        if len(tokens) >= total:
+            break
+    return _finalize(tokens, parent, total, pad_id)
+
+
+def build_parallel(root_token: int, branches: Sequence[Sequence[int]],
+                   scores: Optional[Sequence[float]],
+                   decoding_length: int, pad_id: int = 0) -> DraftTree:
+    """Parallel multi-branch: no prefix merging (paper §4.2.1).
+
+    Branch lists coming from trie retrieval include every prefix path; keep
+    only maximal paths so parallel layout does not duplicate pure prefixes.
+    """
+    total = 1 + decoding_length
+    paths = [tuple(int(t) for t in b) for b in branches]
+    maximal = _maximal_paths(paths)
+    tokens: List[int] = [int(root_token)]
+    parent: List[int] = [-1]
+    for path in maximal:
+        if len(tokens) + len(path) > total:
+            path = path[: max(0, total - len(tokens))]
+        prev = 0
+        for t in path:
+            tokens.append(t)
+            parent.append(prev)
+            prev = len(tokens) - 1
+        if len(tokens) >= total:
+            break
+    return _finalize(tokens, parent, total, pad_id)
+
+
+def build_single(root_token: int, branches: Sequence[Sequence[int]],
+                 scores: Optional[Sequence[float]],
+                 decoding_length: int, pad_id: int = 0) -> DraftTree:
+    """Single-branch (LLMA-style): longest/highest-score single chain."""
+    total = 1 + decoding_length
+    paths = _maximal_paths([tuple(int(t) for t in b) for b in branches])
+    tokens: List[int] = [int(root_token)]
+    parent: List[int] = [-1]
+    if paths:
+        best = paths[0]
+        for i, t in enumerate(best[:decoding_length]):
+            tokens.append(t)
+            parent.append(i)  # chain: slot i+1's parent is slot i
+    return _finalize(tokens, parent, total, pad_id)
+
+
+def _maximal_paths(paths: Sequence[Tuple[int, ...]]) -> List[Tuple[int, ...]]:
+    """Drop paths that are prefixes of another path; keep input order."""
+    out: List[Tuple[int, ...]] = []
+    pathset = set(paths)
+    seen = set()
+    for p in paths:
+        if not p or p in seen:
+            continue
+        seen.add(p)
+        # p is maximal if no other selected path strictly extends it
+        extended = any(q != p and len(q) > len(p) and q[:len(p)] == p
+                       for q in pathset)
+        if not extended:
+            out.append(p)
+    return out
+
+
+BUILDERS = {
+    "hierarchical": build_hierarchical,
+    "parallel": build_parallel,
+    "single": build_single,
+}
+
+__all__ = ["DraftTree", "build_hierarchical", "build_parallel",
+           "build_single", "BUILDERS"]

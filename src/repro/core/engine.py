@@ -1,0 +1,213 @@
+"""LookaheadEngine — the serving loop tying trie, draft, model and VA together.
+
+The engine is model-agnostic: it drives three jitted device functions built by
+``repro.serving.session.make_session_fns`` (or any object satisfying
+``StepFns``), and owns the host-side state (trie, per-request bookkeeping,
+statistics).  One engine instance serves many requests and keeps its trie warm
+across them (paper Appendix D).
+
+Step anatomy (greedy; sample mode replaces argmax with position-keyed sample):
+
+    root r at position m   (cache holds KV for positions < m)
+    tree  = draft(trie.retrieve(output_suffix))           # host, ~µs
+    chosen = tree_step(cache, m, [r, draft...], pos, mask)  # device
+    accepted, kv_slots = verify_accept(tree, chosen)       # host walk, O(L_d)
+    cache = commit(cache, m, kv_slots)                     # device gather
+    m += len(accepted); r = accepted[-1]
+
+Worst case: no draft matched ⇒ accepted == [chosen[root]] ⇒ identical to
+step-by-step decoding.  Best case: len(accepted) == 1 + draft tree depth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .draft import BUILDERS, DraftTree, _finalize
+from .strategies import LookaheadConfig
+from .trie import TrieTree
+from .verify import verify_accept_batch
+
+
+@dataclass
+class StepFns:
+    """Device functions the engine drives (all jit-compiled, fixed shapes).
+
+    prefill(tokens(B,S) i32, lens(B,) i32) -> (cache, chosen_root(B,) i32)
+    tree_step(cache, cache_lens(B,), tokens(B,T), pos(B,T), mask(B,T,T))
+        -> (cache, chosen(B,T) i32)
+    commit(cache, cache_lens(B,), gather_idx(B,T), n_accept(B,))
+        -> (cache, new_lens(B,))
+    """
+    prefill: Callable
+    tree_step: Callable
+    commit: Callable
+    slots: int            # T = 1 + decoding_length
+    max_seq_len: int
+    pad_id: int = 0
+
+
+@dataclass
+class GenStats:
+    steps: int = 0
+    tokens: int = 0
+    dropped_slots: int = 0    # draft tokens computed but rejected
+
+    @property
+    def edl(self) -> float:
+        """Mean accepted tokens per step (paper: effective decoding length)."""
+        return self.tokens / max(self.steps, 1)
+
+
+@dataclass
+class RequestResult:
+    tokens: List[int]
+    stats: GenStats
+
+
+class LookaheadEngine:
+    def __init__(self, fns: StepFns, config: LookaheadConfig,
+                 eos_id: int = -1):
+        self.fns = fns
+        self.config = config
+        self.eos_id = eos_id
+        self.trie = TrieTree(capacity=config.trie_capacity,
+                             prompt_boost=config.prompt_boost,
+                             decay=config.decay)
+        self._next_request_id = 0
+
+    # ------------------------------------------------------------------ warm
+    def warmup(self, corpora: Sequence[Sequence[int]]) -> None:
+        """Pre-load responses into the trie (paper Appendix D)."""
+        if not self.config.insert_output:
+            return
+        for toks in corpora:
+            self.trie.insert_ngrams(toks, self.config.branch_length)
+
+    # ----------------------------------------------------------------- drafts
+    def _build_tree(self, output: Sequence[int]) -> DraftTree:
+        cfg = self.config
+        root = int(output[-1])
+        if cfg.strategy == "none" or cfg.decoding_length == 0:
+            return _finalize([root], [-1], 1, self.fns.pad_id)
+        branches, scores = self.trie.retrieve(
+            output, decoding_length=cfg.decoding_length,
+            max_prefix_len=cfg.max_prefix_len,
+            min_matched_tokens=cfg.min_matched_tokens)
+        return BUILDERS[cfg.strategy](root, branches, scores,
+                                      cfg.decoding_length, self.fns.pad_id)
+
+    # --------------------------------------------------------------- generate
+    def generate(self, prompt: Sequence[int], max_new_tokens: int,
+                 ) -> RequestResult:
+        res = self.generate_batch([prompt], max_new_tokens)
+        return res[0]
+
+    def generate_batch(self, prompts: Sequence[Sequence[int]],
+                       max_new_tokens: int) -> List[RequestResult]:
+        cfg, fns = self.config, self.fns
+        B = len(prompts)
+        T = fns.slots
+        req_ids = [self._next_request_id + i for i in range(B)]
+        self._next_request_id += B
+
+        # --- trie: prompt-branch inserting (per request id, eliminable)
+        if cfg.insert_prompt:
+            for rid, p in zip(req_ids, prompts):
+                self.trie.insert_ngrams(p, cfg.branch_length, request_id=rid)
+
+        # --- prefill (pad to common length)
+        S = max(len(p) for p in prompts)
+        toks = np.full((B, S), fns.pad_id, dtype=np.int32)
+        lens = np.zeros((B,), dtype=np.int32)
+        for b, p in enumerate(prompts):
+            toks[b, :len(p)] = np.asarray(p, dtype=np.int32)
+            lens[b] = len(p)
+        cache, chosen_root = fns.prefill(toks, lens)
+        chosen_root = np.asarray(chosen_root)
+        cache_lens = lens.copy()
+
+        outputs: List[List[int]] = [[int(chosen_root[b])] for b in range(B)]
+        stats = [GenStats(steps=1, tokens=1) for _ in range(B)]
+        done = np.array([outputs[b][0] == self.eos_id
+                         or max_new_tokens <= 1 for b in range(B)])
+        # context fed to retrieval = prompt ⧺ generated
+        contexts = [list(prompts[b]) + outputs[b] for b in range(B)]
+        # tokens already inserted into the trie from the output stream
+        inserted_upto = [0 for _ in range(B)]
+
+        while (~done).any():
+            trees: List[DraftTree] = []
+            for b in range(B):
+                trees.append(self._build_tree(contexts[b]))
+            tok = np.stack([t.tokens for t in trees])                 # (B,T)
+            pos = (cache_lens[:, None]
+                   + np.stack([t.depth for t in trees])).astype(np.int32)
+            mask = np.stack([t.tree_mask for t in trees])             # (B,T,T)
+            cache, chosen = fns.tree_step(cache, cache_lens, tok, pos, mask)
+            chosen = np.asarray(chosen)
+
+            accepted, kv_slots = verify_accept_batch(trees, chosen)
+            gather = np.zeros((B, T), dtype=np.int32)
+            n_acc = np.zeros((B,), dtype=np.int32)
+            for b in range(B):
+                if done[b]:
+                    n_acc[b] = 0
+                    continue
+                # truncate at EOS / budget
+                budget = max_new_tokens - len(outputs[b])
+                acc = accepted[b][:budget]
+                if self.eos_id in acc:
+                    acc = acc[:acc.index(self.eos_id) + 1]
+                ks = kv_slots[b][:len(acc)]
+                gather[b, :len(ks)] = np.asarray(ks, dtype=np.int32)
+                n_acc[b] = len(ks)
+                outputs[b].extend(acc)
+                contexts[b].extend(acc)
+                stats[b].steps += 1
+                stats[b].tokens += len(acc)
+                stats[b].dropped_slots += trees[b].n_slots - len(ks)
+                if acc and acc[-1] == self.eos_id:
+                    done[b] = True
+                if len(outputs[b]) >= max_new_tokens:
+                    done[b] = True
+            cache, cache_lens = fns.commit(cache, cache_lens, gather, n_acc)
+            cache_lens = np.asarray(cache_lens)
+
+            # --- trie: generated-branch inserting on-the-fly
+            if cfg.insert_output:
+                for b in range(B):
+                    out = outputs[b]
+                    lo = max(inserted_upto[b] - cfg.branch_length, 0)
+                    if len(out) - lo >= 2:
+                        self.trie.insert_ngrams(out[lo:], cfg.branch_length)
+                        inserted_upto[b] = len(out)
+            # safety: cache overflow → stop
+            for b in range(B):
+                if cache_lens[b] + T >= fns.max_seq_len:
+                    done[b] = True
+
+        # --- trie: branch eliminating for finished requests
+        if cfg.eliminate:
+            for rid in req_ids:
+                self.trie.eliminate(rid)
+        if cfg.prune and len(self.trie) > self.trie.capacity:
+            self.trie.prune()
+
+        return [RequestResult(tokens=outputs[b], stats=stats[b])
+                for b in range(B)]
+
+
+def reference_decode(fns: StepFns, prompt: Sequence[int], max_new_tokens: int,
+                     eos_id: int = -1, pad_id: int = 0) -> List[int]:
+    """Plain step-by-step decoding through the *same* device functions
+    (T-wide step with an empty draft).  Ground truth for lossless tests."""
+    cfg = LookaheadConfig(strategy="none", decoding_length=0)
+    engine = LookaheadEngine(fns, cfg, eos_id=eos_id)
+    return engine.generate(prompt, max_new_tokens).tokens
+
+
+__all__ = ["LookaheadEngine", "StepFns", "GenStats", "RequestResult",
+           "reference_decode"]

@@ -1,0 +1,204 @@
+"""Trie tree for lossless draft retrieval (paper §4.3).
+
+The trie records n-grams of prompt tokens and generated tokens.  Each node is a
+token id; a root→node path is a candidate draft branch.  Node frequencies drive
+branch ranking; prompt-derived branches carry a separate per-request frequency
+so they can be *eliminated* when the request finishes (paper: "Branch
+Eliminating") while output-derived branches persist across requests.
+
+Pure host-side data structure: retrieval/update cost is O(branch_length) per
+op and measured in microseconds (paper Table 4: ~1ms for much larger tries).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class _Node:
+    token: int
+    # Persistent frequency (from generated outputs and retained statistics).
+    freq: float = 0.0
+    # Per-request prompt frequency keyed by request id; removed on eliminate().
+    prompt_freq: Dict[int, float] = field(default_factory=dict)
+    children: Dict[int, "_Node"] = field(default_factory=dict)
+
+    def total_freq(self, prompt_boost: float) -> float:
+        return self.freq + prompt_boost * sum(self.prompt_freq.values())
+
+
+class TrieTree:
+    """Global trie with insert / eliminate / decay-prune / retrieve.
+
+    Parameters
+    ----------
+    capacity: max node count before pruning triggers (paper: 16 * decoding_len).
+    prompt_boost: multiplier applied to prompt-branch frequencies when ranking
+        (paper §4.3.2 "Branch Weighting": amplify prompt branches).
+    decay: multiplicative frequency decay applied during pruning.
+    """
+
+    def __init__(self, capacity: int = 1024, prompt_boost: float = 8.0,
+                 decay: float = 0.5):
+        self.root = _Node(token=-1)
+        self.capacity = int(capacity)
+        self.prompt_boost = float(prompt_boost)
+        self.decay = float(decay)
+        self._n_nodes = 0
+
+    # ------------------------------------------------------------------ sizes
+    def __len__(self) -> int:
+        return self._n_nodes
+
+    # ---------------------------------------------------------------- updates
+    def insert(self, tokens: Sequence[int], *, request_id: Optional[int] = None,
+               freq: float = 1.0) -> None:
+        """Insert one branch.  request_id=None → persistent (output) branch;
+        otherwise a prompt branch attributed to that request."""
+        node = self.root
+        for t in tokens:
+            t = int(t)
+            child = node.children.get(t)
+            if child is None:
+                child = _Node(token=t)
+                node.children[t] = child
+                self._n_nodes += 1
+            if request_id is None:
+                child.freq += freq
+            else:
+                child.prompt_freq[request_id] = (
+                    child.prompt_freq.get(request_id, 0.0) + freq)
+            node = child
+        if self._n_nodes > self.capacity:
+            self.prune()
+
+    def insert_ngrams(self, tokens: Sequence[int], branch_length: int, *,
+                      request_id: Optional[int] = None, stride: int = 1) -> None:
+        """Slide a window of ``branch_length`` over ``tokens`` and insert every
+        n-gram (paper Algorithm 1 lines 5-9)."""
+        toks = [int(t) for t in tokens]
+        for i in range(0, max(len(toks) - 1, 0), stride):
+            self.insert(toks[i:i + branch_length], request_id=request_id)
+
+    def eliminate(self, request_id: int) -> None:
+        """Branch Eliminating: drop the prompt frequencies of a finished
+        request; nodes whose every frequency reaches zero are removed."""
+        self._eliminate(self.root, request_id)
+
+    def _eliminate(self, node: _Node, request_id: int) -> None:
+        dead: List[int] = []
+        for tok, child in node.children.items():
+            child.prompt_freq.pop(request_id, None)
+            self._eliminate(child, request_id)
+            if child.freq <= 0.0 and not child.prompt_freq and not child.children:
+                dead.append(tok)
+        for tok in dead:
+            del node.children[tok]
+            self._n_nodes -= 1
+
+    def prune(self) -> None:
+        """Node Pruning: decay frequencies and drop nodes with freq < 1
+        (paper §4.3.1).  Prompt frequencies of live requests are preserved."""
+        self._decay_prune(self.root)
+
+    def _decay_prune(self, node: _Node) -> None:
+        dead: List[int] = []
+        for tok, child in node.children.items():
+            child.freq *= self.decay
+            self._decay_prune(child)
+            if (child.freq < 1.0 and not child.prompt_freq
+                    and not child.children):
+                dead.append(tok)
+        for tok in dead:
+            del node.children[tok]
+            self._n_nodes -= 1
+
+    # -------------------------------------------------------------- retrieval
+    def match(self, prefix: Sequence[int]) -> Optional[_Node]:
+        """Walk ``prefix``; return the node it lands on (sub-trie root)."""
+        node = self.root
+        for t in prefix:
+            node = node.children.get(int(t))
+            if node is None:
+                return None
+        return node
+
+    def retrieve(self, context: Sequence[int], *, decoding_length: int,
+                 max_prefix_len: int = 8, min_matched_tokens: int = 2,
+                 ) -> Tuple[List[List[int]], List[float]]:
+        """Multi-stage retrieval (paper §4.3.2).
+
+        Try the longest suffix of ``context`` as a prefix; shorten until the
+        matched sub-trie holds enough tokens.  Returns up to
+        ``decoding_length`` draft tokens organised as branches
+        (list of token-id lists, each a root-path *excluding* the prefix)
+        plus a parallel list of branch scores.
+        """
+        ctx = [int(t) for t in context]
+        best: Optional[_Node] = None
+        for plen in range(min(max_prefix_len, len(ctx)), 0, -1):
+            node = self.match(ctx[-plen:])
+            if node is None or not node.children:
+                continue
+            size = self._subtree_token_count(node, decoding_length)
+            best = node
+            if size >= min(min_matched_tokens, decoding_length):
+                # Enough tokens behind this (longer ⇒ more relevant) prefix.
+                break
+        if best is None:
+            return [], []
+        return self._top_branches(best, decoding_length)
+
+    def _subtree_token_count(self, node: _Node, cap: int) -> int:
+        n, stack = 0, list(node.children.values())
+        while stack and n < cap:
+            cur = stack.pop()
+            n += 1
+            stack.extend(cur.children.values())
+        return n
+
+    def _top_branches(self, node: _Node, budget: int
+                      ) -> Tuple[List[List[int]], List[float]]:
+        """Greedy highest-frequency expansion of the sub-trie under ``node``
+        into ≤ ``budget`` tokens, returned as branches sorted by score."""
+        # Expand nodes in order of frequency until the token budget is used.
+        # Each selected trie-node = one draft token.
+        import heapq
+        boost = self.prompt_boost
+        counter = 0
+        # order: high frequency first; on ties prefer DEPTH (deep chains
+        # dominate EDL for low-entropy continuations — single-branch drafts
+        # become a strict subset of the hierarchical draft)
+        heap: List[Tuple[float, int, int, _Node, Tuple[int, ...]]] = []
+        for ch in node.children.values():
+            heap.append((-ch.total_freq(boost), -1, counter, ch,
+                         (ch.token,)))
+            counter += 1
+        heapq.heapify(heap)
+        chosen: List[Tuple[Tuple[int, ...], float]] = []
+        taken = 0
+        while heap and taken < budget:
+            negf, negd, _, cur, path = heapq.heappop(heap)
+            chosen.append((path, -negf))
+            taken += 1
+            for ch in cur.children.values():
+                heapq.heappush(
+                    heap, (-ch.total_freq(boost), negd - 1, counter, ch,
+                           path + (ch.token,)))
+                counter += 1
+        # Keep only maximal paths as branches but remember every selected node;
+        # the draft builder needs the *set* of selected nodes (tree), so return
+        # all selected paths — draft.py reconstructs the tree from them.
+        branches = [list(p) for p, _ in chosen]
+        scores = [s for _, s in chosen]
+        return branches, scores
+
+    # -------------------------------------------------------------- estimates
+    def memory_bytes(self) -> int:
+        """Rough host memory estimate of the trie."""
+        # dict entry ≈ 100B, node object ≈ 120B
+        return self._n_nodes * 220
+
+
+__all__ = ["TrieTree"]

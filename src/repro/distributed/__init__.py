@@ -1,0 +1,5 @@
+from .sharding import (ShardingRules, DEFAULT_RULES, sharding_ctx, constrain,
+                       active_mesh, logical_spec, named_sharding)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "sharding_ctx", "constrain",
+           "active_mesh", "logical_spec", "named_sharding"]

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused EmbeddingBag (gather + weighted reduce).
+
+The recsys hot path: ids (N, L) into a (V, D) table with per-slot weights
+(mask folded in) → (N, D) sums.  JAX has no native EmbeddingBag; the jnp
+path is take + segment_sum.  On TPU the win is the *scalar-prefetch grid*:
+the ids live in SMEM ahead of the grid, and each (n, l) grid step DMAs
+exactly one table row HBM→VMEM via the BlockSpec index_map — no (N, L, D)
+gathered intermediate is ever materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, w_ref, row_ref, o_ref, acc_scr, *, L: int):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    w = w_ref[0, l]
+    acc_scr[...] = acc_scr[...] + row_ref[...].astype(jnp.float32) * w
+
+    @pl.when(l == L - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def embedding_bag_kernel(table: jax.Array, ids: jax.Array,
+                         weights: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """table (V, D); ids (N, L) int32; weights (N, L) f32 → (N, D)."""
+    N, L = ids.shape
+    V, D = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N, L),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda n, l, ids_ref: (n, 0)),      # weights
+            pl.BlockSpec((1, D), lambda n, l, ids_ref: (ids_ref[n, l], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda n, l, ids_ref: (n, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), table.dtype),
+        interpret=interpret,
+    )(ids, weights, table)
+
+
+__all__ = ["embedding_bag_kernel"]

@@ -1,0 +1,30 @@
+"""jit'd wrapper for the fused EmbeddingBag kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .embedding_bag import embedding_bag_kernel
+from .ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_fused(table: jax.Array, ids: jax.Array,
+                        mask: jax.Array = None, weights: jax.Array = None,
+                        *, interpret: bool = True) -> jax.Array:
+    """table (V, D); ids (N, L); optional mask/weights (N, L) → (N, D)."""
+    N, L = ids.shape
+    w = jnp.ones((N, L), jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    return embedding_bag_kernel(table, ids.astype(jnp.int32), w,
+                                interpret=interpret)
+
+
+embedding_bag_reference = embedding_bag_ref
+
+__all__ = ["embedding_bag_fused", "embedding_bag_reference"]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused EmbeddingBag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    """table (V, D); ids (N, L); weights (N, L) → (N, D) weighted sums."""
+    emb = jnp.take(table, ids, axis=0).astype(jnp.float32)   # (N, L, D)
+    out = jnp.sum(emb * weights[..., None], axis=1)
+    return out.astype(table.dtype)
+
+
+__all__ = ["embedding_bag_ref"]

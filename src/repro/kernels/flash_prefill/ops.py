@@ -1,0 +1,47 @@
+"""jit'd wrapper for the causal flash-prefill kernel (layout + padding)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_prefill import flash_prefill_grouped, flash_prefill_grouped_tri
+from .ref import flash_prefill_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret", "triangular"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  block_q: int = 256, block_k: int = 512,
+                  interpret: bool = True, triangular: bool = False
+                  ) -> jax.Array:
+    """q (B, S, H, dh); k/v (B, S, K, dh) → causal attention (B, S, H, dh)."""
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    dh_p = -(-dh // 128) * 128
+    pad = dh_p - dh
+    qg = q.reshape(B, S, K, G, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, K, S * G, dh)
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    qg = qg * ((dh_p / dh) ** 0.5)       # kernel scales by padded dh
+    if triangular:
+        out = flash_prefill_grouped_tri(qg, k, v, block=min(bq, bk),
+                                        interpret=interpret)
+    else:
+        out = flash_prefill_grouped(qg, k, v, block_q=bq, block_k=bk,
+                                    interpret=interpret)
+    out = out[..., :dh].reshape(B, K, S, G, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, S, H, dh)
+
+
+flash_prefill_reference = flash_prefill_ref
+
+__all__ = ["flash_prefill", "flash_prefill_reference"]

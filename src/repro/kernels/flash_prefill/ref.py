@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for causal GQA prefill attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """q (B, S, H, dh); k/v (B, S, K, dh) → (B, S, H, dh), causal."""
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(causal, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+__all__ = ["flash_prefill_ref"]

@@ -1,0 +1,68 @@
+"""jit'd public wrapper for the tree-attention kernel.
+
+Handles layout: (B, T, H, dh) q + (B, S, K, dh) cache → grouped
+(B, K, T·G, dh), pads dh→multiple of 128 and S→multiple of block_s, and
+falls back to interpret mode off-TPU (CPU validation; the TPU build uses the
+compiled kernel)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import tree_attention_ref
+from .tree_attention import tree_attention_grouped
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def tree_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                   mask: jax.Array, *, block_s: int = 512,
+                   interpret: bool = True) -> jax.Array:
+    """q (B, T, H, dh); k/v (B, S, K, dh); mask (B, T, S) → (B, T, H, dh)."""
+    B, T, H, dh = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, K, T * G, dh)
+    dh_p = -(-dh // 128) * 128
+    qg = _pad_to(qg, 3, 128)
+    kp = _pad_to(k_cache, 3, 128)
+    vp = _pad_to(v_cache, 3, 128)
+    bs = min(block_s, S) if S % min(block_s, S) == 0 else S
+    sp = (-S) % bs
+    if sp:
+        kp = _pad_to(kp, 1, bs)
+        vp = _pad_to(vp, 1, bs)
+        mask = _pad_to(mask, 2, bs, value=False)
+    # scale uses padded dh inside the kernel; compensate so logits match
+    scale_fix = (dh_p / dh) ** 0.5
+    out = tree_attention_grouped(qg * scale_fix, kp, vp, mask,
+                                 block_s=bs, interpret=interpret)
+    out = out[..., :dh].reshape(B, K, T, G, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, T, H, dh)
+
+
+def tree_attention_reference(q, k_cache, v_cache, mask):
+    """Oracle with the public layout."""
+    B, T, H, dh = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, K, T * G, dh)
+    out = tree_attention_ref(qg, k_cache, v_cache, mask)
+    out = out.reshape(B, K, T, G, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, T, H, dh)
+
+
+__all__ = ["tree_attention", "tree_attention_reference"]

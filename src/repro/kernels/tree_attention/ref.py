@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the tree-attention decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """q (B, K, TG, dh); k/v (B, S, K, dh); mask (B, T, S), TG = T*G.
+    Returns (B, K, TG, dh) in q.dtype; softmax in f32."""
+    B, K, TG, dh = q.shape
+    T = mask.shape[1]
+    g = TG // T
+    s = jnp.einsum("bktd,bskd->bkts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    m = jnp.repeat(mask, g, axis=1)[:, None]        # (B, 1, TG, S)
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(m, p, 0.0)
+    out = jnp.einsum("bkts,bskd->bktd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+__all__ = ["tree_attention_ref"]

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+from typing import Dict, List, Optional  # noqa: E402
+
+import jax            # noqa: E402
+
+from repro import configs as cfgreg                      # noqa: E402
+from repro.configs.common import Cell                    # noqa: E402
+from repro.distributed.sharding import DEFAULT_RULES, sharding_ctx  # noqa: E402
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.launch.roofline import roofline               # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes, record memory/cost analysis + roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+      --shape decode_32k [--multi-pod] [--out out.json]
+
+Without --arch: sweeps all 40 assigned cells (plus antglm-10b), writing
+incremental results so an interrupted sweep resumes where it stopped.
+"""
+
+
+def _compile_cell(cell: Cell, mesh):
+    with sharding_ctx(mesh, cell.rules):
+        in_shardings = cell.shardings(mesh, cell.rules)
+        fn = jax.jit(cell.fn, in_shardings=in_shardings,
+                     donate_argnums=cell.donate)
+        with mesh:
+            lowered = fn.lower(*cell.args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else (
+        cost_list[0] if cost_list else {})
+    return compiled, mem, cost
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> Dict:
+    """Compile a cell.  Single-pod runs TWO builds: the production build
+    (lax.scan layer loop) provides the memory analysis — that's what runs on
+    hardware — and an unrolled build provides cost/collective analysis (XLA
+    cost_analysis counts while-loop bodies once; see EXPERIMENTS.md §Dry-run).
+    The multi-pod leg compiles the production build only (sharding proof)."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mod = cfgreg.get_arch(arch)
+
+    cell_fast: Cell = mod.build_cell(shape, mesh, fast=True)
+    compiled_f, mem, cost_f = _compile_cell(cell_fast, mesh)
+    if multi_pod:
+        cost, hlo, cell = cost_f, compiled_f.as_text(), cell_fast
+    else:
+        cell = mod.build_cell(shape, mesh, fast=False)
+        compiled_a, _, cost = _compile_cell(cell, mesh)
+        hlo = compiled_a.as_text()
+
+    n_chips = mesh.size
+    rf = roofline({k: cost.get(k, 0.0) for k in ("flops", "bytes accessed")},
+                  hlo, n_chips, meta=cell.meta)
+    mem_rec = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_rec[attr] = int(v)
+    # XLA CPU ignores donation; on TPU donated args alias their outputs, so
+    # subtract per-chip donated bytes once.
+    donatable = cell_fast.donatable_bytes() // n_chips
+    live = (mem_rec.get("argument_size_in_bytes", 0)
+            - mem_rec.get("alias_size_in_bytes", 0)
+            + mem_rec.get("output_size_in_bytes", 0)
+            + mem_rec.get("temp_size_in_bytes", 0)
+            - donatable)
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "ok": True,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": mem_rec,
+        "donated_alias_bytes_per_chip": donatable,
+        "per_chip_live_bytes": live,
+        "fits_16gb": live < 16 * 1024 ** 3,
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "roofline": rf,
+        "meta": cell.meta,
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--include-antglm", action="store_true")
+    args = ap.parse_args()
+
+    results: Dict[str, Dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    if args.arch:
+        shapes = [args.shape] if args.shape else \
+            cfgreg.get_arch(args.arch).SHAPES
+        cells = [(args.arch, s) for s in shapes]
+    else:
+        cells = cfgreg.assigned_cells()
+        if args.include_antglm:
+            cells += [("antglm_10b", s)
+                      for s in cfgreg.get_arch("antglm_10b").SHAPES]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            key = f"{arch}/{shape}/{'2x16x16' if mp else '16x16'}"
+            if results.get(key, {}).get("ok"):
+                print(f"[skip] {key}")
+                continue
+            print(f"[run ] {key} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp)
+                print(f"[ ok ] {key}: compile={rec['compile_s']}s "
+                      f"bottleneck={rec['roofline']['bottleneck']} "
+                      f"live={rec['per_chip_live_bytes']/2**30:.2f}GiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "ok": False,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"[FAIL] {key}: {rec['error'][:200]}", flush=True)
+            results[key] = rec
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

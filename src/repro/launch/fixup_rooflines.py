@@ -1,0 +1,49 @@
+"""Recompute roofline terms for existing dry-run records after a metric
+model change (floors) — reuses stored cost + collective bytes, no recompile.
+
+    PYTHONPATH=src python -m repro.launch.fixup_rooflines dryrun_results.json
+"""
+import json
+import sys
+
+from repro import configs as cfgreg
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        results = json.load(f)
+    meta_cache = {}
+    for key, rec in results.items():
+        if not rec.get("ok"):
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        mk = (arch, shape)
+        if mk not in meta_cache:
+            cell = cfgreg.get_arch(arch).build_cell(shape, fast=True)
+            meta_cache[mk] = cell.meta
+        meta = meta_cache[mk]
+        rec["meta"] = meta
+        r = rec["roofline"]
+        n = rec["n_chips"]
+        flops = r["hlo_flops_per_chip"] + meta.get("flops_correction", 0.0) / n
+        floor = meta.get("bytes_floor", 0.0) / n
+        t_c = flops / PEAK_FLOPS_BF16
+        t_mf = floor / HBM_BW if floor else r["hlo_bytes_per_chip"] / HBM_BW
+        t_cl = r["collective_bytes_per_chip"] / (4 * ICI_BW)
+        terms = {"compute_s": t_c, "memory_s": t_mf, "collective_s": t_cl}
+        r.update(terms)
+        r["memory_raw_s"] = r["hlo_bytes_per_chip"] / HBM_BW
+        r["bottleneck"] = max(terms, key=terms.get).replace("_s", "")
+        if meta.get("model_flops"):
+            mfpc = meta["model_flops"] / n
+            r["useful_flops_ratio"] = mfpc / max(flops, 1.0)
+            r["roofline_fraction"] = (mfpc / PEAK_FLOPS_BF16) / max(
+                max(terms.values()), 1e-12)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"fixed {len(results)} records")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("GiB", 2 ** 30), ("MiB", 2 ** 20), ("KiB", 2 ** 10)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def render(results: Dict) -> str:
+    single = {k: v for k, v in results.items() if v.get("mesh") == "16x16"}
+    multi = {k: v for k, v in results.items() if v.get("mesh") == "2x16x16"}
+
+    out = []
+    out.append("### Dry-run summary\n")
+    n_ok_s = sum(1 for v in single.values() if v.get("ok"))
+    n_ok_m = sum(1 for v in multi.values() if v.get("ok"))
+    out.append(f"- single-pod 16×16 (256 chips): **{n_ok_s}/{len(single)}** "
+               "cells lower+compile OK")
+    out.append(f"- multi-pod 2×16×16 (512 chips): **{n_ok_m}/{len(multi)}** "
+               "cells lower+compile OK\n")
+    fails = [(k, v.get("error", "")) for k, v in results.items()
+             if not v.get("ok")]
+    if fails:
+        out.append("Failures:")
+        for k, e in fails:
+            out.append(f"- `{k}`: {e[:160]}")
+        out.append("")
+
+    out.append("\n#### Per-cell memory (multi-pod mesh, per chip; donation-"
+               "adjusted — see §Dry-run notes)\n")
+    out.append("| arch | shape | live/chip | fits 16GiB | args | temps |")
+    out.append("|---|---|---:|:--:|---:|---:|")
+    for k, v in multi.items():
+        if not v.get("ok"):
+            continue
+        m = v["memory"]
+        out.append(
+            f"| {v['arch']} | {v['shape']} | "
+            f"{fmt_b(v['per_chip_live_bytes'])} | "
+            f"{'✓' if v['fits_16gb'] else '✗'} | "
+            f"{fmt_b(m.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_b(m.get('temp_size_in_bytes', 0))} |")
+
+    out.append("\n### Roofline (single-pod 16×16, 256 chips; per-step)\n")
+    out.append("| arch | shape | compute | memory(floor) | memory(raw*) | "
+               "collective | bottleneck | useful-flops ratio | roofline frac |")
+    out.append("|---|---|---:|---:|---:|---:|---|---:|---:|")
+    for k, v in single.items():
+        if not v.get("ok"):
+            continue
+        r = v["roofline"]
+        ufr = r.get("useful_flops_ratio")
+        rff = r.get("roofline_fraction")
+        out.append(
+            f"| {v['arch']} | {v['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r.get('memory_raw_s', 0))} | "
+            f"{fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck']} | "
+            f"{'' if ufr is None else f'{ufr:.3f}'} | "
+            f"{'' if rff is None else f'{rff:.4f}'} |")
+
+    out.append("\n#### Collective breakdown (single-pod; per-chip bytes/step)\n")
+    out.append("| arch | shape | all-reduce | all-gather | reduce-scatter | "
+               "all-to-all | permute |")
+    out.append("|---|---|---:|---:|---:|---:|---:|")
+    for k, v in single.items():
+        if not v.get("ok"):
+            continue
+        c = v["roofline"]["collective_by_kind"]
+        out.append(
+            f"| {v['arch']} | {v['shape']} | {fmt_b(c['all-reduce'])} | "
+            f"{fmt_b(c['all-gather'])} | {fmt_b(c['reduce-scatter'])} | "
+            f"{fmt_b(c['all-to-all'])} | {fmt_b(c['collective-permute'])} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        print(render(json.load(f)))

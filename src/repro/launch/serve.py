@@ -1,0 +1,78 @@
+"""Serving launcher: run a LookaheadEngine over an arch config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+        --smoke --requests 8
+
+On real hardware drop --smoke to load the full config (weights from
+--ckpt-dir via training.checkpoint) onto the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs as cfgreg
+from repro.core import LookaheadConfig, LookaheadEngine
+from repro.distributed.sharding import DEFAULT_RULES, sharding_ctx
+from repro.models import transformer as tx
+from repro.serving.session import make_session_fns
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import PROFILES, SyntheticCorpus
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--decoding-length", type=int, default=32)
+    ap.add_argument("--branch-length", type=int, default=12)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    mod = cfgreg.get_arch(args.arch)
+    cfg = mod.smoke_config() if args.smoke else mod.full_config()
+    if not hasattr(cfg, "n_layers"):
+        raise SystemExit(f"{args.arch} is not an LM arch; serving loop is "
+                         "for autoregressive decoders (see DESIGN.md "
+                         "§Arch-applicability)")
+    cfg = type(cfg)(**{**cfg.__dict__, "max_seq_len": 768}) \
+        if args.smoke else cfg
+    params = tx.init_params(cfg, jax.random.key(0))
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        state, step = mgr.restore({"params": params})
+        params = state["params"]
+        print(f"restored checkpoint step {step}")
+
+    la = LookaheadConfig(decoding_length=args.decoding_length,
+                         branch_length=args.branch_length,
+                         sample=args.sample, temperature=args.temperature)
+    fns = make_session_fns(cfg, params, sample=args.sample,
+                           temperature=args.temperature,
+                           base_key=jax.random.key(0), slots=la.slots)
+    engine = LookaheadEngine(fns, la)
+    corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
+    reqs = [corpus.sample()[0][:96] for _ in range(args.requests)]
+    t0 = time.time()
+    tok = steps = 0
+    for i in range(0, len(reqs), args.batch):
+        outs = engine.generate_batch(reqs[i:i + args.batch], args.max_new)
+        for o in outs:
+            tok += len(o.tokens)
+            steps += o.stats.steps
+    dt = time.time() - t0
+    print(f"{tok} tokens / {steps} steps (EDL {tok/max(steps,1):.2f}) "
+          f"in {dt:.1f}s -> {tok/dt:.1f} tok/s; trie={len(engine.trie)} nodes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .transformer import TransformerConfig, init_params, train_logits, prefill, tree_step, lm_loss
+
+__all__ = ["TransformerConfig", "init_params", "train_logits", "prefill",
+           "tree_step", "lm_loss"]

@@ -1,0 +1,3 @@
+from . import equiformer, sampler, so3
+
+__all__ = ["equiformer", "sampler", "so3"]

@@ -1,0 +1,397 @@
+"""EquiformerV2-style equivariant graph attention via eSCN SO(2) convolutions
+[arXiv:2306.12059].
+
+Core compute pattern (the irrep tensor-product regime of the taxonomy):
+  per edge e = (s → t):
+    1. rotate irreps features of s, t into the edge frame (Wigner-D blocks,
+       edge aligned with ẑ)                                — O(L³) per edge
+    2. SO(2) convolution: block-diagonal in m, |m| ≤ m_max  — the eSCN trick
+       that replaces the O(L⁶) Clebsch-Gordan tensor product
+    3. attention: logits from invariant (l=0) channels + radial basis,
+       segment-softmax over incoming edges
+    4. rotate messages back, scatter-sum into target nodes
+       (``jax.ops.segment_sum`` — JAX's message-passing primitive)
+
+Feature layout: x (N, (l_max+1)², C) with m-major blocks per l.
+
+Two execution paths:
+  * dense    — all edge tensors materialized (small/medium graphs),
+  * chunked  — lax.scan over edge chunks with two-pass segment softmax
+               (memory-bounded; giant graphs).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .so3 import apply_blocks, lsq, real_sph_harm, rotation_to_z, wigner_blocks
+
+
+@dataclass(frozen=True)
+class EquiformerConfig:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    channels: int = 128              # d_hidden: channels per irrep component
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    d_feat_in: int = 128             # scalar input features per node
+    n_rbf: int = 32
+    cutoff: float = 5.0
+    n_out: int = 1                   # graph targets or node classes
+    node_level: bool = False         # True: per-node outputs (classification)
+    edge_chunk: int = 0              # >0: chunked path with this chunk size
+    scan_layers: bool = True         # False: unroll (dry-run cost accuracy)
+    remat: bool = False              # checkpoint each layer (training)
+    dtype: str = "float32"
+
+    @property
+    def lsq(self) -> int:
+        return lsq(self.l_max)
+
+    def n_params(self) -> int:
+        C, L, M = self.channels, self.l_max, self.m_max
+        n0 = L + 1
+        so2 = (2 * n0 * C) * (n0 * C)                    # m=0
+        for m in range(1, M + 1):
+            nl = L + 1 - m
+            so2 += 2 * (2 * nl * C) * (nl * C)           # W_r, W_i
+        per_layer = (so2 + self.n_rbf * (L + 1) * 2 * C  # radial scale
+                     + (2 * C + self.n_rbf) * self.n_heads  # attn mlp
+                     + C * C                              # out proj
+                     + 2 * (L + 1) * C                    # norms
+                     + (L + 1) * C * 2 * C + C * 2 * C + (L + 1) * 2 * C * C)
+        return (self.d_feat_in * C + self.n_layers * per_layer
+                + C * C + C * self.n_out)
+
+
+def _m_indices(l_max: int) -> Dict[int, Tuple[List[int], List[int]]]:
+    """For each m: (plus-component indices, minus-component indices) into the
+    lsq layout, over degrees l >= m."""
+    out = {}
+    for m in range(0, l_max + 1):
+        plus = [l * l + l + m for l in range(m, l_max + 1)]
+        minus = [l * l + l - m for l in range(m, l_max + 1)]
+        out[m] = (plus, minus)
+    return out
+
+
+def init_params(cfg: EquiformerConfig, key: jax.Array) -> Dict:
+    C, L, M, Lq = cfg.channels, cfg.l_max, cfg.m_max, cfg.lsq
+    nL = cfg.n_layers
+    dt = jnp.dtype(cfg.dtype)
+    ks = iter(jax.random.split(key, 64))
+    init = lambda shape, s=None: (
+        jax.random.normal(next(ks), shape, jnp.float32)
+        * (s if s is not None else (1.0 / math.sqrt(shape[-2] if len(shape) > 1
+                                                    else shape[-1])))
+    ).astype(dt)
+
+    layer = {
+        # SO(2) conv (input = concat(src, tgt) -> 2C per component)
+        "w0": init((nL, (L + 1) * 2 * C, (L + 1) * C), 0.02),
+    }
+    for m in range(1, M + 1):
+        nl = L + 1 - m
+        layer[f"wr{m}"] = init((nL, nl * 2 * C, nl * C), 0.02)
+        layer[f"wi{m}"] = init((nL, nl * 2 * C, nl * C), 0.02)
+    layer.update({
+        "rad_w": init((nL, cfg.n_rbf, (L + 1) * 2 * C), 0.05),
+        "attn_w": init((nL, 2 * C + cfg.n_rbf, cfg.n_heads), 0.05),
+        "attn_b": jnp.zeros((nL, cfg.n_heads), dt),
+        "out_proj": init((nL, C, C), 0.02),
+        "ln1": jnp.ones((nL, L + 1, C), dt),
+        "ln2": jnp.ones((nL, L + 1, C), dt),
+        # FFN: per-l linear C->2C, invariant gate, per-l linear 2C->C
+        "ffn_w1": init((nL, L + 1, C, 2 * C), 0.02),
+        "ffn_gate": init((nL, C, 2 * C), 0.02),
+        "ffn_w2": init((nL, L + 1, 2 * C, C), 0.02),
+    })
+    return {
+        "w_in": init((cfg.d_feat_in, C), 0.02),
+        "layers": layer,
+        "head_w1": init((C, C), 0.02),
+        "head_w2": init((C, cfg.n_out), 0.02),
+        "ln_f": jnp.ones((L + 1, C), dt),
+    }
+
+
+def param_logical_axes(cfg: EquiformerConfig) -> Dict:
+    layer = {"w0": (None, None, "tensor")}
+    for m in range(1, cfg.m_max + 1):
+        layer[f"wr{m}"] = (None, None, "tensor")
+        layer[f"wi{m}"] = (None, None, "tensor")
+    layer.update({
+        "rad_w": (None, None, None), "attn_w": (None, None, None),
+        "attn_b": (None, None), "out_proj": (None, None, None),
+        "ln1": (None, None, None), "ln2": (None, None, None),
+        "ffn_w1": (None, None, None, "tensor"),
+        "ffn_gate": (None, None, "tensor"),
+        "ffn_w2": (None, None, "tensor", None),
+    })
+    return {"w_in": (None, None), "layers": layer, "head_w1": (None, None),
+            "head_w2": (None, None), "ln_f": (None, None)}
+
+
+# ------------------------------------------------------------------- pieces
+def _rbf(dist: jax.Array, n: int, cutoff: float) -> jax.Array:
+    mu = jnp.linspace(0.0, cutoff, n)
+    beta = (n / cutoff) ** 2
+    return jnp.exp(-beta * (dist[..., None] - mu) ** 2)
+
+
+def _eq_norm(x: jax.Array, scale: jax.Array, l_max: int,
+             eps: float = 1e-6) -> jax.Array:
+    """Equivariant RMS norm: normalize each l-block by its RMS over (m, C)."""
+    outs = []
+    for l in range(l_max + 1):
+        blk = x[..., l * l:(l + 1) * (l + 1), :]
+        ms = jnp.mean(jnp.square(blk.astype(jnp.float32)),
+                      axis=(-2, -1), keepdims=True)
+        outs.append((blk * jax.lax.rsqrt(ms + eps).astype(x.dtype))
+                    * scale[..., l, :][..., None, :])
+    return jnp.concatenate(outs, axis=-2)
+
+
+def _so2_conv(z: jax.Array, lp: Dict, cfg: EquiformerConfig) -> jax.Array:
+    """z (E, lsq, 2C) rotated concat features -> (E, lsq, C) messages.
+    Block-diagonal in m; components with |m| > m_max are truncated (eSCN)."""
+    E = z.shape[0]
+    C, L = cfg.channels, cfg.l_max
+    midx = _m_indices(L)
+    out = jnp.zeros((E, cfg.lsq, C), z.dtype)
+    # m = 0
+    p0, _ = midx[0]
+    z0 = z[:, jnp.array(p0)].reshape(E, -1)
+    y0 = (z0 @ lp["w0"]).reshape(E, L + 1, C)
+    out = out.at[:, jnp.array(p0)].set(y0)
+    # 1 <= m <= m_max
+    for m in range(1, cfg.m_max + 1):
+        plus, minus = midx[m]
+        nl = len(plus)
+        zp = z[:, jnp.array(plus)].reshape(E, -1)
+        zm = z[:, jnp.array(minus)].reshape(E, -1)
+        wr, wi = lp[f"wr{m}"], lp[f"wi{m}"]
+        yp = (zp @ wr - zm @ wi).reshape(E, nl, C)
+        ym = (zm @ wr + zp @ wi).reshape(E, nl, C)
+        out = out.at[:, jnp.array(plus)].set(yp)
+        out = out.at[:, jnp.array(minus)].set(ym)
+    return out
+
+
+def _edge_messages(lp: Dict, cfg: EquiformerConfig, xn: jax.Array,
+                   src: jax.Array, dst: jax.Array, blocks: List[jax.Array],
+                   rbf: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Full per-edge message + attention logits.
+
+    Returns (msg (E, lsq, C) — rotated back, logits (E, H))."""
+    xs = xn[src]
+    xt = xn[dst]
+    xs_r = apply_blocks(blocks, xs)
+    xt_r = apply_blocks(blocks, xt)
+    z = jnp.concatenate([xs_r, xt_r], axis=-1)                  # (E, lsq, 2C)
+    # radial modulation per (l, 2C), broadcast over m within l
+    rad = (rbf @ lp["rad_w"]).reshape(
+        rbf.shape[0], cfg.l_max + 1, 2 * cfg.channels)
+    rep = jnp.concatenate(
+        [jnp.repeat(rad[:, l:l + 1], 2 * l + 1, axis=1)
+         for l in range(cfg.l_max + 1)], axis=1)
+    z = z * rep
+    msg = _so2_conv(z, lp, cfg)
+    msg = apply_blocks(blocks, msg, transpose=True)             # rotate back
+    inv = jnp.concatenate([xs[:, 0, :], xt[:, 0, :], rbf.astype(xs.dtype)],
+                          axis=-1)
+    logits = (inv @ lp["attn_w"] + lp["attn_b"]).astype(jnp.float32)
+    return msg, logits
+
+
+def _attention_dense(lp: Dict, cfg: EquiformerConfig, x: jax.Array,
+                     src: jax.Array, dst: jax.Array, blocks: List[jax.Array],
+                     rbf: jax.Array, edge_mask: jax.Array,
+                     n_nodes: int) -> jax.Array:
+    xn = _eq_norm(x, lp["ln1"], cfg.l_max)
+    msg, logits = _edge_messages(lp, cfg, xn, src, dst, blocks, rbf)
+    logits = jnp.where(edge_mask[:, None], logits, -1e30)
+    seg_max = jax.ops.segment_max(logits, dst, num_segments=n_nodes)
+    seg_max = jnp.maximum(seg_max, -1e30)
+    w = jnp.exp(logits - seg_max[dst]) * edge_mask[:, None]
+    denom = jax.ops.segment_sum(w, dst, num_segments=n_nodes)
+    H = cfg.n_heads
+    ch = cfg.channels // H
+    wmsg = (msg.reshape(msg.shape[0], cfg.lsq, H, ch)
+            * w[:, None, :, None].astype(msg.dtype))
+    num = jax.ops.segment_sum(wmsg, dst, num_segments=n_nodes)
+    agg = num / jnp.maximum(denom, 1e-20)[:, None, :, None].astype(msg.dtype)
+    agg = agg.reshape(n_nodes, cfg.lsq, cfg.channels)
+    return x + agg @ lp["out_proj"]
+
+
+def _attention_chunked(lp: Dict, cfg: EquiformerConfig, x: jax.Array,
+                       src: jax.Array, dst: jax.Array, edge_vec: jax.Array,
+                       rbf: jax.Array, edge_mask: jax.Array,
+                       n_nodes: int) -> jax.Array:
+    """Two-pass chunk-scanned attention: pass A computes logits (cheap —
+    invariants only) and the segment max/denominator; pass B streams the full
+    SO(2) messages.  Wigner blocks recomputed per chunk (flops-for-memory)."""
+    E = src.shape[0]
+    ck = cfg.edge_chunk
+    nchunk = E // ck
+    assert E % ck == 0, (E, ck)
+    H = cfg.n_heads
+    xn = _eq_norm(x, lp["ln1"], cfg.l_max)
+    inv = xn[:, 0, :]
+
+    def logits_chunk(s, d, r, m):
+        z = jnp.concatenate([inv[s], inv[d], r.astype(inv.dtype)], axis=-1)
+        lg = (z @ lp["attn_w"] + lp["attn_b"]).astype(jnp.float32)
+        return jnp.where(m[:, None], lg, -1e30)
+
+    resh = lambda a, shp: a.reshape((nchunk, ck) + shp)
+    srcs, dsts = resh(src, ()), resh(dst, ())
+    rbfs, masks = resh(rbf, (rbf.shape[-1],)), resh(edge_mask, ())
+    vecs = resh(edge_vec, (3,))
+
+    def passA(carry, xs):
+        smax, sden = carry
+        s, d, r, m = xs
+        lg = logits_chunk(s, d, r, m)
+        smax = jnp.maximum(smax, jax.ops.segment_max(
+            lg, d, num_segments=n_nodes))
+        return (smax, sden), None
+
+    smax0 = jnp.full((n_nodes, H), -jnp.inf, jnp.float32)
+    (smax, _), _ = jax.lax.scan(passA, (smax0, None),
+                                (srcs, dsts, rbfs, masks))
+    smax = jnp.maximum(smax, -1e30)
+
+    ch = cfg.channels // H
+
+    def passB(carry, xs):
+        num, den = carry
+        s, d, r, m, v = xs
+        R = rotation_to_z(v)
+        blocks = [b.astype(x.dtype) for b in wigner_blocks(R, cfg.l_max)]
+        msg, lg = _edge_messages(lp, cfg, xn, s, d, blocks, r)
+        lg = jnp.where(m[:, None], lg, -1e30)
+        w = jnp.exp(lg - smax[d]) * m[:, None]
+        den = den + jax.ops.segment_sum(w, d, num_segments=n_nodes)
+        wmsg = (msg.reshape(ck, cfg.lsq, H, ch)
+                * w[:, None, :, None].astype(msg.dtype))
+        num = num + jax.ops.segment_sum(wmsg, d, num_segments=n_nodes)
+        return (num, den), None
+
+    num0 = jnp.zeros((n_nodes, cfg.lsq, H, ch), x.dtype)
+    den0 = jnp.zeros((n_nodes, H), jnp.float32)
+    (num, den), _ = jax.lax.scan(passB, (num0, den0),
+                                 (srcs, dsts, rbfs, masks, vecs))
+    agg = num / jnp.maximum(den, 1e-20)[:, None, :, None].astype(x.dtype)
+    agg = agg.reshape(n_nodes, cfg.lsq, cfg.channels)
+    return x + agg @ lp["out_proj"]
+
+
+def _ffn(lp: Dict, cfg: EquiformerConfig, x: jax.Array) -> jax.Array:
+    xn = _eq_norm(x, lp["ln2"], cfg.l_max)
+    gate = jax.nn.sigmoid(xn[:, 0, :] @ lp["ffn_gate"])         # (N, 2C)
+    outs = []
+    for l in range(cfg.l_max + 1):
+        blk = xn[:, l * l:(l + 1) * (l + 1), :]
+        h = jnp.einsum("nmc,cd->nmd", blk, lp["ffn_w1"][l])
+        h = h * gate[:, None, :]
+        outs.append(jnp.einsum("nmd,dc->nmc", h, lp["ffn_w2"][l]))
+    return x + jnp.concatenate(outs, axis=-2)
+
+
+# ------------------------------------------------------------------- forward
+def forward(cfg: EquiformerConfig, params: Dict, node_feat: jax.Array,
+            positions: jax.Array, edges: jax.Array, edge_mask: jax.Array,
+            graph_ids: Optional[jax.Array] = None,
+            n_graphs: int = 1) -> Dict[str, jax.Array]:
+    """node_feat (N, d_feat), positions (N, 3), edges (E, 2) int32 [src, dst],
+    edge_mask (E,).  Returns dict with 'node_out' (N, n_out) and 'graph_out'
+    (n_graphs, n_out) (mean-pooled)."""
+    N = node_feat.shape[0]
+    C = cfg.channels
+    x = jnp.zeros((N, cfg.lsq, C), jnp.dtype(cfg.dtype))
+    x = x.at[:, 0, :].set(node_feat.astype(x.dtype) @ params["w_in"])
+
+    src, dst = edges[:, 0], edges[:, 1]
+    src = constrain(src, "edges")
+    dst = constrain(dst, "edges")
+    rel = positions[src] - positions[dst]
+    dist = jnp.maximum(jnp.linalg.norm(rel.astype(jnp.float32), axis=-1),
+                       1e-6)
+    rbf = _rbf(dist, cfg.n_rbf, cfg.cutoff).astype(x.dtype)
+    edge_vec = (rel / dist[:, None]).astype(jnp.float32)
+
+    use_chunk = cfg.edge_chunk > 0 and src.shape[0] % cfg.edge_chunk == 0 \
+        and src.shape[0] > cfg.edge_chunk
+    if not use_chunk:
+        R = rotation_to_z(edge_vec)
+        blocks = [b.astype(x.dtype) for b in wigner_blocks(R, cfg.l_max)]
+
+    def layer_body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(x.dtype), lp)
+        if use_chunk:
+            x = _attention_chunked(lp, cfg, x, src, dst, edge_vec, rbf,
+                                   edge_mask, N)
+        else:
+            x = _attention_dense(lp, cfg, x, src, dst, blocks, rbf,
+                                 edge_mask, N)
+        x = _ffn(lp, cfg, x)
+        # node-sharded residual stream (gathers all-gather per layer)
+        x = constrain(x, "nodes", None, None)
+        return x, None
+
+    if cfg.remat:
+        layer_body = jax.checkpoint(layer_body)
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(layer_body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = layer_body(x, jax.tree.map(lambda a: a[i],
+                                              params["layers"]))
+    x = _eq_norm(x, params["ln_f"], cfg.l_max)
+    inv = jax.nn.silu(x[:, 0, :] @ params["head_w1"])
+    node_out = inv @ params["head_w2"]
+    if graph_ids is None:
+        graph_out = jnp.mean(node_out, axis=0, keepdims=True)
+    else:
+        s = jax.ops.segment_sum(node_out, graph_ids, num_segments=n_graphs)
+        n = jax.ops.segment_sum(jnp.ones((N, 1), node_out.dtype), graph_ids,
+                                num_segments=n_graphs)
+        graph_out = s / jnp.maximum(n, 1.0)
+    return {"node_out": node_out, "graph_out": graph_out,
+            "l1_feats": x[:, 1:4, :]}
+
+
+def node_class_loss(cfg: EquiformerConfig, params: Dict, batch: Dict
+                    ) -> jax.Array:
+    out = forward(cfg, params, batch["node_feat"], batch["positions"],
+                  batch["edges"], batch["edge_mask"])
+    logits = out["node_out"].astype(jnp.float32)
+    labels = batch["labels"]
+    lm = (labels >= 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[:, None],
+                               axis=-1)[:, 0]
+    return jnp.sum(nll * lm) / jnp.maximum(jnp.sum(lm), 1)
+
+
+def energy_loss(cfg: EquiformerConfig, params: Dict, batch: Dict
+                ) -> jax.Array:
+    out = forward(cfg, params, batch["node_feat"], batch["positions"],
+                  batch["edges"], batch["edge_mask"],
+                  graph_ids=batch["graph_ids"],
+                  n_graphs=batch["energies"].shape[0])
+    pred = out["graph_out"][:, 0].astype(jnp.float32)
+    return jnp.mean(jnp.square(pred - batch["energies"].astype(jnp.float32)))
+
+
+__all__ = ["EquiformerConfig", "init_params", "param_logical_axes", "forward",
+           "node_class_loss", "energy_loss"]

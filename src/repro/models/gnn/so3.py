@@ -1,0 +1,180 @@
+"""SO(3) machinery for eSCN-style equivariant networks.
+
+* real spherical harmonics up to l_max (associated-Legendre recursion),
+* real Wigner-D rotation blocks via the Ivanic–Ruedenberg recursion
+  (J. Phys. Chem. 1996 + 1998 erratum) — D¹ is the rotation itself in the
+  (y, z, x) real-SH ordering; higher degrees are built recursively, fully
+  vectorized over edges,
+* ``rotation_to_z`` — the per-edge frame used by the eSCN trick.
+
+Conventions are validated by tests: orthogonality, composition
+D(R₁R₂)=D(R₁)D(R₂), and the action property Y(R·r) = D(R)·Y(r).
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------ real SH
+def real_sph_harm(vecs: jax.Array, l_max: int) -> jax.Array:
+    """vecs (..., 3) unit vectors -> (..., (l_max+1)^2) real SH values.
+
+    Ordering: blocks of m = -l..l per degree.  Normalization: orthonormal
+    (∫ Y² = 1).  Cartesian convention: θ polar from +z, φ azimuth from +x.
+    """
+    x, y, z = vecs[..., 0], vecs[..., 1], vecs[..., 2]
+    ct = jnp.clip(z, -1.0, 1.0)
+    st = jnp.sqrt(jnp.clip(1.0 - ct * ct, 0.0, None))
+    phi = jnp.arctan2(y, x)
+
+    # associated Legendre P_l^m(ct) via stable recursion
+    P = {}
+    P[(0, 0)] = jnp.ones_like(ct)
+    for m in range(1, l_max + 1):
+        P[(m, m)] = -(2 * m - 1) * st * P[(m - 1, m - 1)]
+    for m in range(0, l_max):
+        P[(m + 1, m)] = (2 * m + 1) * ct * P[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            P[(l, m)] = ((2 * l - 1) * ct * P[(l - 1, m)]
+                         - (l + m - 1) * P[(l - 2, m)]) / (l - m)
+
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            N = math.sqrt((2 * l + 1) / (4 * math.pi)
+                          * math.factorial(l - am) / math.factorial(l + am))
+            # (-1)^m cancels the Condon–Shortley phase carried by P_l^m,
+            # matching the standard real-SH convention (Y_{1,-1} ∝ +y).
+            cs = (-1.0) ** am
+            if m == 0:
+                out.append(N * P[(l, 0)])
+            elif m > 0:
+                out.append(cs * math.sqrt(2.0) * N * P[(l, m)]
+                           * jnp.cos(m * phi))
+            else:
+                out.append(cs * math.sqrt(2.0) * N * P[(l, am)]
+                           * jnp.sin(am * phi))
+    return jnp.stack(out, axis=-1)
+
+
+# ------------------------------------------------------------------ Wigner-D
+def wigner_blocks(R: jax.Array, l_max: int) -> List[jax.Array]:
+    """R (..., 3, 3) rotation matrices -> [D^0, D^1, ..., D^l_max] with
+    D^l shaped (..., 2l+1, 2l+1), real-SH basis (m = -l..l)."""
+    batch = R.shape[:-2]
+    # real-SH m=(-1,0,1) basis corresponds to Cartesian (y, z, x)
+    perm = np.array([1, 2, 0])
+    D1 = R[..., perm, :][..., :, perm]
+    blocks = [jnp.ones(batch + (1, 1), R.dtype), D1]
+
+    def d1(i, j):  # i, j in {-1, 0, 1}
+        return D1[..., i + 1, j + 1]
+
+    for l in range(2, l_max + 1):
+        Dp = blocks[-1]       # (..., 2l-1, 2l-1)
+
+        def dp(mu, m):        # mu, m in [-(l-1), l-1]
+            return Dp[..., mu + l - 1, m + l - 1]
+
+        def Pf(i, mu, m):
+            if abs(m) < l:
+                return d1(i, 0) * dp(mu, m)
+            if m == l:
+                return d1(i, 1) * dp(mu, l - 1) - d1(i, -1) * dp(mu, -(l - 1))
+            return d1(i, 1) * dp(mu, -(l - 1)) + d1(i, -1) * dp(mu, l - 1)
+
+        rows = []
+        for mp in range(-l, l + 1):
+            row = []
+            for m in range(-l, l + 1):
+                denom = (l + m) * (l - m) if abs(m) < l else (2 * l) * (2 * l - 1)
+                u = math.sqrt((l + mp) * (l - mp) / denom)
+                v = 0.5 * math.sqrt((1.0 + (mp == 0)) * (l + abs(mp) - 1)
+                                    * (l + abs(mp)) / denom) \
+                    * (1.0 - 2.0 * (mp == 0))
+                w = -0.5 * math.sqrt((l - abs(mp) - 1) * (l - abs(mp))
+                                     / denom) * (1.0 - (mp == 0))
+                terms = 0.0
+                if u != 0.0:
+                    terms = terms + u * Pf(0, mp, m)
+                if v != 0.0:
+                    if mp == 0:
+                        V = Pf(1, 1, m) + Pf(-1, -1, m)
+                    elif mp > 0:
+                        V = (Pf(1, mp - 1, m) * math.sqrt(1.0 + (mp == 1))
+                             - Pf(-1, -mp + 1, m) * (1.0 - (mp == 1)))
+                    else:
+                        V = (Pf(1, mp + 1, m) * (1.0 - (mp == -1))
+                             + Pf(-1, -mp - 1, m) * math.sqrt(1.0 + (mp == -1)))
+                    terms = terms + v * V
+                if w != 0.0:
+                    if mp > 0:
+                        W = Pf(1, mp + 1, m) + Pf(-1, -mp - 1, m)
+                    else:
+                        W = Pf(1, mp - 1, m) - Pf(-1, -mp + 1, m)
+                    terms = terms + w * W
+                row.append(terms)
+            rows.append(jnp.stack(row, axis=-1))
+        blocks.append(jnp.stack(rows, axis=-2))
+    return blocks
+
+
+def apply_blocks(blocks: List[jax.Array], feats: jax.Array,
+                 transpose: bool = False) -> jax.Array:
+    """Apply block-diagonal Wigner-D to irreps features.
+
+    blocks[l] (..., 2l+1, 2l+1); feats (..., lsq, C) with lsq = (l_max+1)².
+    """
+    outs = []
+    off = 0
+    for l, D in enumerate(blocks):
+        n = 2 * l + 1
+        blk = feats[..., off:off + n, :]
+        if transpose:
+            outs.append(jnp.einsum("...ji,...jc->...ic", D, blk))
+        else:
+            outs.append(jnp.einsum("...ij,...jc->...ic", D, blk))
+        off += n
+    return jnp.concatenate(outs, axis=-2)
+
+
+def rotation_to_z(vec: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """vec (..., 3) unit vectors -> R (..., 3, 3) with R @ vec = ẑ.
+
+    Rodrigues rotation about axis = vec × ẑ; the ±ẑ singularities fall back
+    to identity / rotation about x̂ by π.
+    """
+    v = vec / jnp.maximum(jnp.linalg.norm(vec, axis=-1, keepdims=True), eps)
+    z = jnp.zeros_like(v).at[..., 2].set(1.0)
+    axis = jnp.cross(v, z)
+    s = jnp.linalg.norm(axis, axis=-1, keepdims=True)           # sinθ
+    c = v[..., 2:3]                                             # cosθ
+    k = axis / jnp.maximum(s, eps)
+    K = jnp.stack([
+        jnp.stack([jnp.zeros_like(k[..., 0]), -k[..., 2], k[..., 1]], -1),
+        jnp.stack([k[..., 2], jnp.zeros_like(k[..., 0]), -k[..., 0]], -1),
+        jnp.stack([-k[..., 1], k[..., 0], jnp.zeros_like(k[..., 0])], -1),
+    ], -2)
+    eye = jnp.broadcast_to(jnp.eye(3, dtype=vec.dtype), K.shape)
+    R = eye + s[..., None] * K + (1.0 - c[..., None]) * (K @ K)
+    # v ≈ -ẑ: rotate π about x̂;  v ≈ +ẑ: identity
+    flipx = jnp.asarray(np.diag([1.0, -1.0, -1.0]), vec.dtype)
+    R = jnp.where((c < 1.0 - eps)[..., None], R, eye)
+    R = jnp.where((c > -1.0 + eps)[..., None],
+                  R, jnp.broadcast_to(flipx, K.shape))
+    return R
+
+
+def lsq(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+__all__ = ["real_sph_harm", "wigner_blocks", "apply_blocks", "rotation_to_z",
+           "lsq"]

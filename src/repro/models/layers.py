@@ -1,0 +1,111 @@
+"""Shared neural building blocks: RMSNorm, RoPE, GQA attention, SwiGLU."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., T) -> cos/sin (..., T, head_dim//2), f32."""
+    half = head_dim // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B,T,H,dh); cos/sin (B,T,dh/2). LLaMA-style rotate-half."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+ACTS: dict = {
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array, *, softmax_in_f32: bool = True
+                  ) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, T, H, dh); k, v: (B, S, K, dh); mask: (B, T, S) bool (True=attend).
+    H must be a multiple of K.  Returns (B, T, H, dh).
+    """
+    B, T, H, dh = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = dh ** -0.5
+    qg = q.reshape(B, T, K, G, dh)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k,
+                        preferred_element_type=jnp.float32 if softmax_in_f32
+                        else q.dtype)
+    scores = scores * scale
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v)
+    return out.reshape(B, T, H, dh)
+
+
+def gqa_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                          q_positions: jax.Array, kv_len_mask: jax.Array,
+                          q_chunk: int) -> jax.Array:
+    """Memory-bounded causal attention: scan over query chunks so the score
+    tensor is (B, K, G, q_chunk, S) instead of (B, K, G, T, S).
+
+    q_positions: (B, T) absolute position of each query token.
+    kv_len_mask: (B, S) bool — valid (non-pad) key positions.
+    Causality: q attends to keys with position <= its own position; key
+    position here equals the buffer index (self-attention over the same seq).
+    """
+    B, T, H, dh = q.shape
+    S = k.shape[1]
+    assert T % q_chunk == 0, (T, q_chunk)
+    n_chunks = T // q_chunk
+    kpos = jnp.arange(S)[None, :]
+
+    def body(carry, xs):
+        qc, pc = xs  # (B, q_chunk, H, dh), (B, q_chunk)
+        m = (kpos[:, None, :] <= pc[:, :, None]) & kv_len_mask[:, None, :]
+        oc = gqa_attention(qc, k, v, m)
+        return carry, oc
+
+    qs = q.reshape(B, n_chunks, q_chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(B, n_chunks, q_chunk).transpose(1, 0, 2)
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, dh)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, act: Callable = jax.nn.silu) -> jax.Array:
+    g = x @ w_gate
+    u = x @ w_up
+    h = act(g) * u
+    h = constrain(h, "batch", "seq", "ffn_act") if h.ndim == 3 else h
+    return h @ w_down
+
+
+__all__ = ["rms_norm", "rope_angles", "apply_rope", "gqa_attention",
+           "gqa_attention_chunked", "swiglu", "ACTS", "NEG_INF"]

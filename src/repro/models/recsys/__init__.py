@@ -1,0 +1,3 @@
+from . import bert4rec, embedding, sasrec, two_tower, wide_deep
+
+__all__ = ["bert4rec", "embedding", "sasrec", "two_tower", "wide_deep"]

@@ -1,0 +1,83 @@
+"""BERT4Rec [arXiv:1904.06690]: bidirectional transformer over item
+sequences, trained with a cloze (masked-item) objective.  Encoder-only —
+no decode step (serve = full-sequence scoring of masked positions)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .seq_common import encode, encoder_logical_axes, init_encoder
+
+
+@dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 50_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    mask_id: int = 1                 # reserved item id for [MASK]
+    dtype: str = "float32"
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        return (self.n_items * d + self.seq_len * d
+                + self.n_blocks * (4 * d * d + 8 * d * d) + d)
+
+
+def init_params(cfg: Bert4RecConfig, key: jax.Array) -> Dict:
+    return init_encoder(key, cfg.n_items, cfg.embed_dim, cfg.n_blocks,
+                        cfg.n_heads, cfg.seq_len, jnp.dtype(cfg.dtype))
+
+
+def param_logical_axes(cfg: Bert4RecConfig) -> Dict:
+    return encoder_logical_axes(cfg.n_blocks)
+
+
+def hidden(cfg: Bert4RecConfig, params: Dict, ids: jax.Array,
+           pad_mask: jax.Array) -> jax.Array:
+    return encode(params, ids, cfg.n_blocks, cfg.n_heads, causal=False,
+                  pad_mask=pad_mask)
+
+
+def loss(cfg: Bert4RecConfig, params: Dict, batch: Dict) -> jax.Array:
+    """Cloze objective with SAMPLED softmax (the 10⁶-item catalog makes a
+    full softmax infeasible at batch 65k — (B,S,V) would be petabytes).
+
+    batch: ids (B,S) with mask_id at cloze slots, masked_pos (B,M),
+    masked_labels (B,M) (-1 = pad), negatives (NS,) shared sample,
+    pad_mask (B,S).  Target = index 0 of [label ⧺ negatives]."""
+    h = hidden(cfg, params, batch["ids"], batch["pad_mask"])
+    B, M = batch["masked_pos"].shape
+    hm = jnp.take_along_axis(h, batch["masked_pos"][..., None], axis=1)
+    lab = jnp.maximum(batch["masked_labels"], 0)
+    pos_emb = jnp.take(params["item_emb"], lab, axis=0)       # (B,M,d)
+    neg_emb = jnp.take(params["item_emb"], batch["negatives"], axis=0)
+    pos_score = jnp.sum(hm * pos_emb, axis=-1, keepdims=True)  # (B,M,1)
+    neg_score = jnp.einsum("bmd,nd->bmn", hm, neg_emb)
+    scores = jnp.concatenate([pos_score, neg_score], axis=-1)
+    logp = jax.nn.log_softmax(scores.astype(jnp.float32), axis=-1)
+    lm = (batch["masked_labels"] >= 0)
+    return -jnp.sum(logp[..., 0] * lm) / jnp.maximum(jnp.sum(lm), 1)
+
+
+def serve(cfg: Bert4RecConfig, params: Dict, ids: jax.Array,
+          pad_mask: jax.Array, cand_ids=None) -> jax.Array:
+    """Last-position scoring.  cand_ids (B, C): ranking-stage candidate
+    scoring; None: full-catalog scores (B, n_items) — retrieval stage."""
+    h = hidden(cfg, params, ids, pad_mask)
+    last = jnp.sum(pad_mask.astype(jnp.int32), axis=1) - 1
+    hl = jnp.take_along_axis(h, last[:, None, None].astype(jnp.int32),
+                             axis=1)[:, 0]                     # (B,d)
+    if cand_ids is None:
+        return hl @ params["item_emb"].T
+    cand = jnp.take(params["item_emb"], cand_ids, axis=0)      # (B,C,d)
+    return jnp.einsum("bd,bcd->bc", hl, cand)
+
+
+__all__ = ["Bert4RecConfig", "init_params", "param_logical_axes", "hidden",
+           "loss", "serve"]

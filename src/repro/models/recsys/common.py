@@ -1,0 +1,49 @@
+"""Shared recsys helpers: MLP towers, losses."""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key: jax.Array, dims: Sequence[int], dtype=jnp.float32
+             ) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, len(dims) - 1)
+    p = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"w{i}"] = (jax.random.normal(ks[i], (a, b), jnp.float32)
+                      * (2.0 / a) ** 0.5).astype(dtype)
+        p[f"b{i}"] = jnp.zeros((b,), dtype)
+    return p
+
+
+def mlp(p: Dict[str, jax.Array], x: jax.Array, final_act: bool = False
+        ) -> jax.Array:
+    n = sum(1 for k in p if k.startswith("w"))
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def in_batch_softmax_loss(q: jax.Array, c: jax.Array,
+                          logq: jax.Array = None) -> jax.Array:
+    """Sampled-softmax with in-batch negatives + optional logQ correction.
+    q, c: (B, D) matched pairs (row i of c is the positive for row i of q)."""
+    scores = (q.astype(jnp.float32) @ c.astype(jnp.float32).T)
+    if logq is not None:
+        scores = scores - logq[None, :]
+    labels = jnp.arange(q.shape[0])
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+__all__ = ["init_mlp", "mlp", "bce_loss", "in_batch_softmax_loss"]

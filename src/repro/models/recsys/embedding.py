@@ -1,0 +1,93 @@
+"""Embedding primitives for recsys — JAX has no native EmbeddingBag or
+CSR sparse, so the lookup/reduce path is built from ``jnp.take`` +
+``jax.ops.segment_sum`` (this IS the hot path of every recsys model here).
+
+Tables are row-sharded over the ``model`` mesh axis (logical axis
+"table_rows"); XLA SPMD turns `take` over a sharded operand into the
+gather + all-reduce pattern of a distributed embedding service.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """table (V, D), ids (...) -> (..., D)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  weights: Optional[jax.Array] = None,
+                  mask: Optional[jax.Array] = None,
+                  combiner: str = "sum") -> jax.Array:
+    """Fixed-shape multi-hot bag: ids (..., L) -> (..., D).
+
+    ``mask`` (..., L) marks valid slots (padding excluded); ``weights`` are
+    optional per-sample weights.
+    """
+    emb = jnp.take(table, ids, axis=0)                    # (..., L, D)
+    w = jnp.ones(ids.shape, dtype=emb.dtype)
+    if weights is not None:
+        w = w * weights.astype(emb.dtype)
+    if mask is not None:
+        w = w * mask.astype(emb.dtype)
+    emb = emb * w[..., None]
+    if combiner == "sum":
+        return emb.sum(axis=-2)
+    if combiner == "mean":
+        denom = jnp.maximum(w.sum(axis=-1, keepdims=True), 1.0)
+        return emb.sum(axis=-2) / denom
+    if combiner == "max":
+        neg = jnp.where(w[..., None] > 0, emb, -jnp.inf)
+        out = neg.max(axis=-2)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(combiner)
+
+
+def embedding_bag_ragged(table: jax.Array, flat_ids: jax.Array,
+                         segment_ids: jax.Array, num_segments: int,
+                         weights: Optional[jax.Array] = None,
+                         combiner: str = "sum") -> jax.Array:
+    """Ragged bag: flat_ids (N,), segment_ids (N,) -> (num_segments, D)."""
+    emb = jnp.take(table, flat_ids, axis=0)               # (N, D)
+    if weights is not None:
+        emb = emb * weights[:, None].astype(emb.dtype)
+    if combiner == "sum":
+        return jax.ops.segment_sum(emb, segment_ids, num_segments=num_segments)
+    if combiner == "mean":
+        s = jax.ops.segment_sum(emb, segment_ids, num_segments=num_segments)
+        n = jax.ops.segment_sum(jnp.ones((flat_ids.shape[0], 1), emb.dtype),
+                                segment_ids, num_segments=num_segments)
+        return s / jnp.maximum(n, 1.0)
+    if combiner == "max":
+        return jax.ops.segment_max(emb, segment_ids, num_segments=num_segments)
+    raise ValueError(combiner)
+
+
+def hashed_lookup(q_table: jax.Array, r_table: jax.Array, ids: jax.Array
+                  ) -> jax.Array:
+    """Quotient-remainder trick [arXiv:1909.02107]: O(2·sqrt(V)) rows serve a
+    vocab of size V.  q_table (Vq, D), r_table (Vr, D)."""
+    vr = r_table.shape[0]
+    q = jnp.take(q_table, ids // vr, axis=0)
+    r = jnp.take(r_table, ids % vr, axis=0)
+    return q * r
+
+
+def init_table(key: jax.Array, rows: int, dim: int, scale: float = 0.01,
+               dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (rows, dim), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def shard_table(t: jax.Array) -> jax.Array:
+    return constrain(t, "table_rows", None)
+
+
+__all__ = ["lookup", "embedding_bag", "embedding_bag_ragged", "hashed_lookup",
+           "init_table", "shard_table"]

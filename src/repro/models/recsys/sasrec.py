@@ -1,0 +1,81 @@
+"""SASRec [arXiv:1808.09781]: causal self-attention sequential recommender.
+
+Next-item objective.  Autoregressive in principle — but item streams lack
+the n-gram re-occurrence structure Lookahead's trie exploits (see DESIGN.md
+§Arch-applicability); ``serve`` exposes single-step next-item scoring.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .seq_common import encode, encoder_logical_axes, init_encoder
+
+
+@dataclass(frozen=True)
+class SasRecConfig:
+    name: str = "sasrec"
+    n_items: int = 50_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dtype: str = "float32"
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        return (self.n_items * d + self.seq_len * d
+                + self.n_blocks * (4 * d * d + 8 * d * d) + d)
+
+
+def init_params(cfg: SasRecConfig, key: jax.Array) -> Dict:
+    return init_encoder(key, cfg.n_items, cfg.embed_dim, cfg.n_blocks,
+                        cfg.n_heads, cfg.seq_len, jnp.dtype(cfg.dtype))
+
+
+def param_logical_axes(cfg: SasRecConfig) -> Dict:
+    return encoder_logical_axes(cfg.n_blocks)
+
+
+def hidden(cfg: SasRecConfig, params: Dict, ids: jax.Array,
+           pad_mask: jax.Array) -> jax.Array:
+    return encode(params, ids, cfg.n_blocks, cfg.n_heads, causal=True,
+                  pad_mask=pad_mask)
+
+
+def loss(cfg: SasRecConfig, params: Dict, batch: Dict) -> jax.Array:
+    """Next-item objective with SAMPLED softmax over a shared negative set
+    (full (B,S,10⁶) softmax is infeasible at batch 65k).
+
+    batch: ids (B,S), labels (B,S) (-1 pad), negatives (NS,), pad_mask."""
+    h = hidden(cfg, params, batch["ids"], batch["pad_mask"])
+    lab = jnp.maximum(batch["labels"], 0)
+    pos_emb = jnp.take(params["item_emb"], lab, axis=0)        # (B,S,d)
+    neg_emb = jnp.take(params["item_emb"], batch["negatives"], axis=0)
+    pos_score = jnp.sum(h * pos_emb, axis=-1, keepdims=True)
+    neg_score = jnp.einsum("bsd,nd->bsn", h, neg_emb)
+    scores = jnp.concatenate([pos_score, neg_score], axis=-1)
+    logp = jax.nn.log_softmax(scores.astype(jnp.float32), axis=-1)
+    lm = (batch["labels"] >= 0)
+    return -jnp.sum(logp[..., 0] * lm) / jnp.maximum(jnp.sum(lm), 1)
+
+
+def serve(cfg: SasRecConfig, params: Dict, ids: jax.Array,
+          pad_mask: jax.Array, cand_ids=None) -> jax.Array:
+    """Next-item scores at the last valid position; cand_ids (B,C) for
+    ranking-stage candidate scoring, None for full catalog (retrieval)."""
+    h = hidden(cfg, params, ids, pad_mask)
+    last = jnp.sum(pad_mask.astype(jnp.int32), axis=1) - 1
+    hl = jnp.take_along_axis(h, last[:, None, None].astype(jnp.int32),
+                             axis=1)[:, 0]
+    if cand_ids is None:
+        return hl @ params["item_emb"].T
+    cand = jnp.take(params["item_emb"], cand_ids, axis=0)
+    return jnp.einsum("bd,bcd->bc", hl, cand)
+
+
+__all__ = ["SasRecConfig", "init_params", "param_logical_axes", "hidden",
+           "loss", "serve"]

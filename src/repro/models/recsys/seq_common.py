@@ -1,0 +1,71 @@
+"""Shared sequential-recommender transformer encoder (BERT4Rec / SASRec)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import gqa_attention, rms_norm
+
+
+def init_encoder(key: jax.Array, n_items: int, d: int, n_blocks: int,
+                 n_heads: int, seq_len: int, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3 + 7 * n_blocks)
+    init = lambda kk, shape, s=0.02: (
+        jax.random.normal(kk, shape, jnp.float32) * s).astype(dtype)
+    p = {
+        "item_emb": init(ks[0], (n_items, d)),
+        "pos_emb": init(ks[1], (seq_len, d)),
+        "ln_f": jnp.ones((d,), dtype),
+    }
+    for b in range(n_blocks):
+        o = 2 + 7 * b
+        p[f"blk{b}"] = {
+            "ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+            "wq": init(ks[o], (d, d)), "wk": init(ks[o + 1], (d, d)),
+            "wv": init(ks[o + 2], (d, d)), "wo": init(ks[o + 3], (d, d)),
+            "w1": init(ks[o + 4], (d, 4 * d)),
+            "w2": init(ks[o + 5], (4 * d, d)),
+        }
+    return p
+
+
+def encode(params: Dict, ids: jax.Array, n_blocks: int, n_heads: int,
+           causal: bool, pad_mask: jax.Array) -> jax.Array:
+    """ids (B, S) -> hidden (B, S, d).  pad_mask (B, S) True=valid."""
+    B, S = ids.shape
+    d = params["item_emb"].shape[1]
+    dh = d // n_heads
+    h = jnp.take(params["item_emb"], ids, axis=0) + params["pos_emb"][None, :S]
+    h = constrain(h, "batch", None, None)
+    attn_mask = pad_mask[:, None, :] & jnp.ones((B, S, S), bool)
+    if causal:
+        attn_mask = attn_mask & (jnp.arange(S)[None, :, None]
+                                 >= jnp.arange(S)[None, None, :])
+    for b in range(n_blocks):
+        p = params[f"blk{b}"]
+        hn = rms_norm(h, p["ln1"])
+        q = (hn @ p["wq"]).reshape(B, S, n_heads, dh)
+        k = (hn @ p["wk"]).reshape(B, S, n_heads, dh)
+        v = (hn @ p["wv"]).reshape(B, S, n_heads, dh)
+        a = gqa_attention(q, k, v, attn_mask).reshape(B, S, d)
+        h = h + a @ p["wo"]
+        hn = rms_norm(h, p["ln2"])
+        h = h + jax.nn.gelu(hn @ p["w1"]) @ p["w2"]
+    return rms_norm(h, params["ln_f"])
+
+
+def encoder_logical_axes(n_blocks: int) -> Dict:
+    p = {"item_emb": ("table_rows", None), "pos_emb": (None, None),
+         "ln_f": (None,)}
+    for b in range(n_blocks):
+        p[f"blk{b}"] = {"ln1": (None,), "ln2": (None,),
+                        "wq": (None, "tensor"), "wk": (None, "tensor"),
+                        "wv": (None, "tensor"), "wo": ("tensor", None),
+                        "w1": (None, "tensor"), "w2": ("tensor", None)}
+    return p
+
+
+__all__ = ["init_encoder", "encode", "encoder_logical_axes"]

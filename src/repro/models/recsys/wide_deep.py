@@ -1,0 +1,96 @@
+"""Wide & Deep CTR model [arXiv:1606.07792].
+
+40 sparse fields → 32-dim embeddings → concat → deep MLP 1024-512-256;
+wide part = per-field 1-dim embeddings (linear over the raw categorical
+crosses) + dense features.  The embedding-bag lookup over the multi-hot
+fields is the hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from . import embedding as E
+from .common import bce_loss, init_mlp, mlp
+
+
+@dataclass(frozen=True)
+class WideDeepConfig:
+    name: str = "wide-deep"
+    n_sparse: int = 40
+    embed_dim: int = 32
+    rows_per_table: int = 100_000
+    multi_hot: int = 4              # ids per field (bag size)
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256)
+    n_dense: int = 13
+    dtype: str = "float32"
+
+    def n_params(self) -> int:
+        emb = self.n_sparse * self.rows_per_table * (self.embed_dim + 1)
+        dims = (self.n_sparse * self.embed_dim + self.n_dense,) + self.mlp_dims
+        deep = sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return emb + deep + dims[-1] + 1 + self.n_dense
+
+
+def init_params(cfg: WideDeepConfig, key: jax.Array) -> Dict:
+    k = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        # one stacked table: (F, V, D) — sharded on V over 'model'
+        "tables": E.init_table(k[0], cfg.n_sparse * cfg.rows_per_table,
+                               cfg.embed_dim, dtype=dt
+                               ).reshape(cfg.n_sparse, cfg.rows_per_table,
+                                         cfg.embed_dim),
+        "wide_tables": E.init_table(k[1], cfg.n_sparse * cfg.rows_per_table,
+                                    1, dtype=dt
+                                    ).reshape(cfg.n_sparse,
+                                              cfg.rows_per_table, 1),
+        "wide_dense": jnp.zeros((cfg.n_dense,), dt),
+        "deep": init_mlp(k[2], (deep_in,) + cfg.mlp_dims, dt),
+        "head": (jax.random.normal(k[3], (cfg.mlp_dims[-1], 1), jnp.float32)
+                 * 0.05).astype(dt),
+        "bias": jnp.zeros((1,), dt),
+    }
+
+
+def param_logical_axes(cfg: WideDeepConfig) -> Dict:
+    deep = {f"w{i}": (None, None) for i in range(len(cfg.mlp_dims))}
+    deep.update({f"b{i}": (None,) for i in range(len(cfg.mlp_dims))})
+    return {"tables": (None, "table_rows", None),
+            "wide_tables": (None, "table_rows", None),
+            "wide_dense": (None,), "deep": deep,
+            "head": (None, None), "bias": (None,)}
+
+
+def forward(cfg: WideDeepConfig, params: Dict, sparse_ids: jax.Array,
+            sparse_mask: jax.Array, dense: jax.Array) -> jax.Array:
+    """sparse_ids (B, F, L) int32, sparse_mask (B, F, L), dense (B, n_dense)
+    -> logits (B,)."""
+    B = sparse_ids.shape[0]
+    sparse_ids = constrain(sparse_ids, "batch", None, None)
+    # per-field bag: vmap the bag over the field axis against stacked tables
+    bag = jax.vmap(lambda t, i, m: E.embedding_bag(t, i, mask=m),
+                   in_axes=(0, 1, 1), out_axes=1)
+    emb = bag(params["tables"], sparse_ids, sparse_mask)       # (B, F, D)
+    wide = bag(params["wide_tables"], sparse_ids, sparse_mask)  # (B, F, 1)
+    deep_in = jnp.concatenate(
+        [emb.reshape(B, -1), dense.astype(emb.dtype)], axis=-1)
+    deep_out = mlp(params["deep"], deep_in, final_act=True)
+    logit = (deep_out @ params["head"])[:, 0]
+    logit = logit + wide.sum(axis=(1, 2)) + dense @ params["wide_dense"]
+    return logit + params["bias"][0]
+
+
+def loss(cfg: WideDeepConfig, params: Dict, batch: Dict) -> jax.Array:
+    logits = forward(cfg, params, batch["sparse_ids"], batch["sparse_mask"],
+                     batch["dense"])
+    return bce_loss(logits, batch["labels"])
+
+
+__all__ = ["WideDeepConfig", "init_params", "param_logical_axes", "forward",
+           "loss"]

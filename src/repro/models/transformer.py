@@ -1,0 +1,526 @@
+"""Config-driven decoder-only transformer (dense + MoE) with three lowerable
+entry points:
+
+  * ``train_logits``  — full-sequence causal forward (training).
+  * ``prefill``       — causal forward that fills a KV cache and returns the
+                        logits of each sequence's last real token.
+  * ``tree_step``     — the Lookahead step: T = 1+decoding_length slots with a
+                        tree-structured attention mask attend to the cache,
+                        new KV entries are scattered at cache_len + slot.
+
+Layers are stacked and iterated with ``lax.scan`` (HLO size O(1) in depth);
+``remat=True`` wraps the scanned body in ``jax.checkpoint`` for training.
+All tensors carry logical-axis sharding hints (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import active_mesh, constrain
+from repro.models import moe as moe_lib
+from repro.models.layers import (ACTS, NEG_INF, apply_rope, gqa_attention,
+                                 gqa_attention_chunked, rms_norm, rope_angles,
+                                 swiglu)
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "tiny"
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 128
+    vocab_size: int = 256
+    head_dim: Optional[int] = None          # default: d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    act: str = "silu"
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.5
+    moe_impl: str = "auto"                  # "ref" | "ep" | "auto"
+    # execution
+    dtype: str = "float32"                  # activation dtype
+    param_dtype: str = "float32"
+    remat: bool = False
+    scan_layers: bool = True                # False: unroll (dry-run accuracy —
+                                            # XLA cost_analysis counts while
+                                            # bodies once; see EXPERIMENTS.md)
+    q_chunk: int = 0                        # >0: chunked prefill attention
+    max_seq_len: int = 512                  # KV cache allocation length
+    # attention decode path: "dense" (pjit) or "flash_decode" (seq-sharded)
+    decode_attn: str = "dense"
+    attn_score_f32: bool = True             # False: bf16 score temps (perf)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-flops accounting)."""
+        d, dh, V = self.d_model, self.dh, self.vocab_size
+        qkvo = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        if self.moe:
+            ffn = 3 * d * self.moe_d_ff * self.n_experts + d * self.n_experts
+            ffn += 3 * d * self.moe_d_ff * self.n_shared_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = qkvo + ffn + 2 * d
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed experts)."""
+        if not self.moe:
+            return self.n_params()
+        d, dh, V = self.d_model, self.dh, self.vocab_size
+        qkvo = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        ffn = 3 * d * self.moe_d_ff * (self.top_k + self.n_shared_experts)
+        ffn += d * self.n_experts
+        per_layer = qkvo + ffn + 2 * d
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+# ------------------------------------------------------------------ parameters
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Params:
+    k = jax.random.split(key, 16)
+    d, dh, H, K = cfg.d_model, cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    L, V = cfg.n_layers, cfg.vocab_size
+    pd = cfg.pdtype
+    init = lambda kk, shape, scale=0.02: (
+        jax.random.normal(kk, shape, dtype=jnp.float32) * scale).astype(pd)
+
+    layers: Params = {
+        "ln1": jnp.ones((L, d), pd),
+        "ln2": jnp.ones((L, d), pd),
+        "wq": init(k[0], (L, d, H * dh)),
+        "wk": init(k[1], (L, d, K * dh)),
+        "wv": init(k[2], (L, d, K * dh)),
+        "wo": init(k[3], (L, H * dh, d)),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, H * dh), pd)
+        layers["bk"] = jnp.zeros((L, K * dh), pd)
+        layers["bv"] = jnp.zeros((L, K * dh), pd)
+    if cfg.moe:
+        E, F = cfg.n_experts, cfg.moe_d_ff
+        layers["router"] = init(k[4], (L, d, E))
+        layers["we_gate"] = init(k[5], (L, E, d, F))
+        layers["we_up"] = init(k[6], (L, E, d, F))
+        layers["we_down"] = init(k[7], (L, E, F, d))
+        if cfg.n_shared_experts:
+            Fs = F * cfg.n_shared_experts
+            layers["ws_gate"] = init(k[8], (L, d, Fs))
+            layers["ws_up"] = init(k[9], (L, d, Fs))
+            layers["ws_down"] = init(k[10], (L, Fs, d))
+    else:
+        layers["w_gate"] = init(k[4], (L, d, cfg.d_ff))
+        layers["w_up"] = init(k[5], (L, d, cfg.d_ff))
+        layers["w_down"] = init(k[6], (L, cfg.d_ff, d))
+
+    params: Params = {
+        "embed": init(k[11], (V, d)),
+        "ln_f": jnp.ones((d,), pd),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init(k[12], (d, V))
+    return params
+
+
+def param_logical_axes(cfg: TransformerConfig) -> Params:
+    """Logical-axis names per param (for dry-run in_shardings)."""
+    layers = {
+        "ln1": (None, None), "ln2": (None, None),
+        "wq": (None, "fsdp", "tensor"), "wk": (None, "fsdp", "tensor"),
+        "wv": (None, "fsdp", "tensor"), "wo": (None, "tensor", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        layers.update({"bq": (None, "tensor"), "bk": (None, "tensor"),
+                       "bv": (None, "tensor")})
+    if cfg.moe:
+        layers.update({
+            "router": (None, "fsdp", None),
+            "we_gate": (None, "expert", "fsdp", None),
+            "we_up": (None, "expert", "fsdp", None),
+            "we_down": (None, "expert", None, "fsdp"),
+        })
+        if cfg.n_shared_experts:
+            layers.update({"ws_gate": (None, "fsdp", "tensor"),
+                           "ws_up": (None, "fsdp", "tensor"),
+                           "ws_down": (None, "tensor", "fsdp")})
+    else:
+        layers.update({"w_gate": (None, "fsdp", "tensor"),
+                       "w_up": (None, "fsdp", "tensor"),
+                       "w_down": (None, "tensor", "fsdp")})
+    out = {"embed": ("tensor", "fsdp"), "ln_f": (None,), "layers": layers}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ("fsdp", "tensor")
+    return out
+
+
+# ------------------------------------------------------------------- layer fwd
+def _qkv(cfg: TransformerConfig, lp: Params, h: jax.Array
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, T, _ = h.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    return (q.reshape(B, T, H, dh), k.reshape(B, T, K, dh),
+            v.reshape(B, T, K, dh))
+
+
+def _ffn(cfg: TransformerConfig, lp: Params, h: jax.Array) -> jax.Array:
+    B, T, d = h.shape
+    act = ACTS[cfg.act]
+    if not cfg.moe:
+        return swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"], act)
+    x = h.reshape(B * T, d)
+    mesh = active_mesh()
+    impl = cfg.moe_impl
+    if impl == "auto":
+        impl = "ep" if (mesh is not None and "model" in mesh.shape) else "ref"
+    if impl == "ep":
+        y = moe_lib.moe_ep(x, lp["router"], lp["we_gate"], lp["we_up"],
+                           lp["we_down"], cfg.top_k, cfg.capacity_factor,
+                           mesh, act)
+    elif impl == "local":
+        y = moe_lib.moe_local(x, lp["router"], lp["we_gate"], lp["we_up"],
+                              lp["we_down"], cfg.top_k, cfg.capacity_factor,
+                              act)
+    else:
+        y = moe_lib.moe_ref(x, lp["router"], lp["we_gate"], lp["we_up"],
+                            lp["we_down"], cfg.top_k, act)
+    y = y.reshape(B, T, d)
+    if cfg.n_shared_experts:
+        y = y + swiglu(h, lp["ws_gate"], lp["ws_up"], lp["ws_down"], act)
+    return y
+
+
+def _layer_self(cfg: TransformerConfig, lp: Params, h: jax.Array,
+                positions: jax.Array, len_mask: jax.Array,
+                want_kv: bool = True):
+    """Self-attention layer over the full sequence (train / prefill).
+    Returns new hidden states and the (k, v) tensors for cache filling."""
+    hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, hn)
+    cos, sin = rope_angles(positions, cfg.dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    if cfg.q_chunk and h.shape[1] % cfg.q_chunk == 0 and h.shape[1] > cfg.q_chunk:
+        attn = gqa_attention_chunked(q, k, v, positions, len_mask, cfg.q_chunk)
+    else:
+        S = h.shape[1]
+        causal = positions[:, :, None] >= positions[:, None, :]
+        m = causal & len_mask[:, None, :]
+        attn = gqa_attention(q, k, v, m)
+    B, T, H, dh = attn.shape
+    h = h + attn.reshape(B, T, H * dh) @ lp["wo"]
+    h = constrain(h, "batch", "residual_seq", None)
+    h = h + _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
+    # residual_seq: () by default; train cells map it to ("model",) so the
+    # remat-saved residual stream is sequence-sharded (Megatron-SP style)
+    h = constrain(h, "batch", "residual_seq", None)
+    return h, ((k, v) if want_kv else None)
+
+
+def _layer_tree(cfg: TransformerConfig, lp: Params, h: jax.Array,
+                positions: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                cache_lens: jax.Array, full_mask: Optional[jax.Array],
+                attend: Optional[Any] = None
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Tree-decode layer: T slots attend to cache + tree siblings.
+
+    k_cache/v_cache: (B, S_max, K, dh); full_mask: (B, T, S_max) precomputed
+    (past positions + tree-ancestor block).  New KV is scattered at
+    cache_len + slot before attending.  ``attend`` overrides the dense path
+    (sequence-parallel flash-decode writes + attends inside shard_map).
+    """
+    B, T, _ = h.shape
+    hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, hn)
+    cos, sin = rope_angles(positions, cfg.dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if attend is not None:
+        attn, k_cache, v_cache = attend(q, k, v, k_cache, v_cache)
+    else:
+        q = constrain(q, "batch", None, "heads", None)
+        bidx = jnp.arange(B)[:, None]
+        sidx = cache_lens[:, None] + jnp.arange(T)[None, :]
+        k_cache = k_cache.at[bidx, sidx].set(k.astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, sidx].set(v.astype(v_cache.dtype))
+        attn = gqa_attention(q, k_cache, v_cache, full_mask,
+                             softmax_in_f32=cfg.attn_score_f32)
+    H, dh = cfg.n_heads, cfg.dh
+    h = h + attn.reshape(B, T, H * dh) @ lp["wo"]
+    h = h + _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
+    return h, (k_cache, v_cache)
+
+
+# ----------------------------------------------------------------- full models
+def _embed(cfg: TransformerConfig, params: Params, tokens: jax.Array
+           ) -> jax.Array:
+    h = params["embed"].astype(cfg.adtype)[tokens]
+    return h * jnp.asarray(1.0, cfg.adtype)
+
+
+def _unembed(cfg: TransformerConfig, params: Params, h: jax.Array
+             ) -> jax.Array:
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = h @ w.astype(h.dtype)
+    if logits.ndim == 3:
+        logits = constrain(logits, "batch", "seq", "vocab_act")
+    return logits
+
+
+def _scan_layers(cfg: TransformerConfig, params: Params, h: jax.Array,
+                 layer_fn, extra_xs: Tuple = (), extra_args: Tuple = (),
+                 alias_ys_to_xs: bool = False) -> Tuple[jax.Array, Tuple]:
+    """Run layer_fn over stacked layer params with lax.scan (or unrolled
+    when cfg.scan_layers=False — dry-run cost accuracy).
+
+    layer_fn(cfg, lp, h, *extra_args, *per_layer_xs) -> (h, per_layer_ys)
+
+    alias_ys_to_xs: per-layer ys have the same structure/shape as per-layer
+    xs (tree-decode cache update): in unrolled mode write y back into the
+    stacked xs buffer with .at[i].set — XLA aliases this in place, so the
+    unrolled path does NOT hold n_layers live cache copies.
+    """
+    # §Perf (train cells): cast the stacked weights to the activation dtype
+    # BEFORE the layer loop — XLA hoists the loop-invariant fsdp all-gather
+    # out of the scan, and gathering the f32 master copy moves (and holds)
+    # 2x the bytes of the bf16 compute copy.
+    lps = jax.tree.map(lambda a: a.astype(cfg.adtype)
+                       if jnp.issubdtype(a.dtype, jnp.floating) else a,
+                       params["layers"])
+
+    def body(h, xs):
+        lp, xtra = xs
+        h, ys = layer_fn(cfg, lp, h, *extra_args, *xtra)
+        return h, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, ys = jax.lax.scan(body, h, (lps, extra_xs))
+        return h, ys
+    # unrolled
+    buf = extra_xs
+    ys_buf = None
+    for i in range(cfg.n_layers):
+        lp_i = jax.tree.map(lambda a: a[i], lps)
+        xs_i = jax.tree.map(lambda a: a[i], buf)
+        h, y = body(h, (lp_i, xs_i))
+        if y is None:
+            continue
+        if alias_ys_to_xs:
+            buf = jax.tree.map(lambda acc, yy: acc.at[i].set(yy), buf, y)
+        else:
+            if ys_buf is None:
+                ys_buf = jax.tree.map(
+                    lambda yy: jnp.zeros((cfg.n_layers,) + yy.shape,
+                                         yy.dtype), y)
+            ys_buf = jax.tree.map(lambda acc, yy: acc.at[i].set(yy),
+                                  ys_buf, y)
+    return h, (buf if alias_ys_to_xs else ys_buf)
+
+
+def train_logits(cfg: TransformerConfig, params: Params, tokens: jax.Array,
+                 ) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V); plain causal, no padding mask."""
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens)
+    h = constrain(h, "batch", "residual_seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    len_mask = jnp.ones((B, S), dtype=bool)
+    h, _ = _scan_layers(cfg, params, h,
+                        lambda c, lp, hh, pos, lm: _layer_self(
+                            c, lp, hh, pos, lm, want_kv=False),
+                        extra_xs=(), extra_args=(positions, len_mask))
+    return _unembed(cfg, params, h)
+
+
+def lm_loss(cfg: TransformerConfig, params: Params, tokens: jax.Array,
+            labels: jax.Array, loss_mask: Optional[jax.Array] = None
+            ) -> jax.Array:
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens)
+    h = constrain(h, "batch", "residual_seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    len_mask = jnp.ones((B, S), dtype=bool)
+    h, _ = _scan_layers(cfg, params, h,
+                        lambda c, lp, hh, pos, lm: _layer_self(
+                            c, lp, hh, pos, lm, want_kv=False),
+                        extra_xs=(), extra_args=(positions, len_mask))
+
+    # checkpointed loss head: the (B, S, V) f32 logits are NOT saved for the
+    # backward pass — only h (bf16, V/vocab-factor smaller) is; logits are
+    # recomputed during bwd.  Cuts several GiB/chip at 100k+ vocabularies.
+    def head(h_, labels_, mask_):
+        logits = _unembed(cfg, params, h_)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels_[..., None], axis=-1)[..., 0]
+        if mask_ is None:
+            return jnp.mean(nll)
+        return jnp.sum(nll * mask_) / jnp.maximum(jnp.sum(mask_), 1.0)
+
+    return jax.checkpoint(head, static_argnums=())(h, labels, loss_mask) \
+        if cfg.remat else head(h, labels, loss_mask)
+
+
+def init_cache(cfg: TransformerConfig, batch: int,
+               dtype: Optional[jnp.dtype] = None) -> Dict[str, jax.Array]:
+    L, S, K, dh = cfg.n_layers, cfg.max_seq_len, cfg.n_kv_heads, cfg.dh
+    dt = dtype or cfg.adtype
+    return {"k": jnp.zeros((L, batch, S, K, dh), dt),
+            "v": jnp.zeros((L, batch, S, K, dh), dt)}
+
+
+def cache_logical_axes(cfg: TransformerConfig) -> Dict[str, Tuple]:
+    if cfg.decode_attn == "flash_decode":
+        return {"k": (None, None, "kv_seq", "kv_heads", None),
+                "v": (None, None, "kv_seq", "kv_heads", None)}
+    return {"k": (None, "batch", None, "kv_heads", None),
+            "v": (None, "batch", None, "kv_heads", None)}
+
+
+def prefill(cfg: TransformerConfig, params: Params, tokens: jax.Array,
+            lens: jax.Array, cache: Optional[Dict[str, jax.Array]] = None
+            ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Causal forward over padded prompts; fills cache[:, :, :S].
+
+    cache=None: the per-layer KV stack itself becomes the cache (S must be
+    max_seq_len) — avoids a second cache-sized buffer for big prefills.
+    Returns (cache, last_logits (B, V)) at position lens-1 of each row.
+    """
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens)
+    h = constrain(h, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    len_mask = positions < lens[:, None]
+    h, kv = _scan_layers(cfg, params, h, _layer_self, extra_xs=(),
+                         extra_args=(positions, len_mask))
+    k_new, v_new = kv     # (L, B, S, K, dh)
+    if cache is None:
+        assert S == cfg.max_seq_len, (S, cfg.max_seq_len)
+        k_new = k_new.astype(cfg.adtype)
+        v_new = v_new.astype(cfg.adtype)
+        mesh = active_mesh()
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.distributed.flash_decode import cache_partition_spec
+            spec = NamedSharding(mesh, cache_partition_spec(
+                mesh, B, S, cfg.n_kv_heads, cfg.n_heads))
+            k_new = jax.lax.with_sharding_constraint(k_new, spec)
+            v_new = jax.lax.with_sharding_constraint(v_new, spec)
+        cache = {"k": k_new, "v": v_new}
+    else:
+        cache = {
+            "k": cache["k"].at[:, :, :S].set(k_new.astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, :, :S].set(v_new.astype(cache["v"].dtype))}
+    h_last = jnp.take_along_axis(
+        h, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return cache, _unembed(cfg, params, h_last)
+
+
+def tree_step(cfg: TransformerConfig, params: Params,
+              cache: Dict[str, jax.Array], cache_lens: jax.Array,
+              tokens: jax.Array, positions: jax.Array, tree_mask: jax.Array
+              ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Lookahead VA forward.
+
+    tokens (B, T), positions (B, T), tree_mask (B, T, T) ancestor-closure.
+    Returns (cache-with-slots-written, logits (B, T, V)).
+    """
+    B, T = tokens.shape
+    S_max = cache["k"].shape[2]
+    h = _embed(cfg, params, tokens)
+
+    mesh = active_mesh()
+    if cfg.decode_attn == "flash_decode" and mesh is not None:
+        from repro.distributed.flash_decode import make_flash_attend
+        attend = make_flash_attend(mesh, cache_lens, tree_mask,
+                                   score_f32=cfg.attn_score_f32)
+        full_mask = None
+    else:
+        attend = None
+        # full mask (B, T, S_max): past ∨ tree block
+        j = jnp.arange(S_max)[None, None, :]                  # (1,1,S)
+        past = j < cache_lens[:, None, None]
+        rel = j - cache_lens[:, None, None]                   # slot index
+        in_block = (rel >= 0) & (rel < T)
+        relc = jnp.clip(rel, 0, T - 1).astype(jnp.int32)      # (B,1,S)
+        # tm[b,i,s] = tree_mask[b, i, relc[b,0,s]]
+        tm = jnp.take_along_axis(
+            tree_mask, jnp.broadcast_to(relc, (B, T, S_max)), axis=2)
+        full_mask = past | (in_block & tm)
+
+    def layer(cfg_, lp, h_, k_c, v_c):
+        return _layer_tree(cfg_, lp, h_, positions, k_c, v_c, cache_lens,
+                           full_mask, attend)
+
+    h, kv = _scan_layers(cfg, params, h, layer,
+                         extra_xs=(cache["k"], cache["v"]), extra_args=(),
+                         alias_ys_to_xs=True)
+    new_cache = {"k": kv[0], "v": kv[1]}
+    return new_cache, _unembed(cfg, params, h)
+
+
+def commit_cache(cache: Dict[str, jax.Array], cache_lens: jax.Array,
+                 gather_idx: jax.Array, n_accept: jax.Array
+                 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Compact accepted slots: new position m+j takes KV from m+gather[j].
+
+    gather_idx (B, T) slot indices (monotone increasing over valid j);
+    n_accept (B,).  Rows beyond n_accept keep garbage (never attended).
+    """
+    k, v = cache["k"], cache["v"]
+    L, B, S, K, dh = k.shape
+    T = gather_idx.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    src = cache_lens[:, None] + gather_idx                       # (B, T)
+    dst = cache_lens[:, None] + jnp.arange(T)[None, :]
+    kg = k[:, bidx, src]                                         # (L,B,T,K,dh)
+    vg = v[:, bidx, src]
+    k = k.at[:, bidx, dst].set(kg)
+    v = v.at[:, bidx, dst].set(vg)
+    return {"k": k, "v": v}, cache_lens + n_accept
+
+
+__all__ = ["TransformerConfig", "Params", "init_params", "param_logical_axes",
+           "train_logits", "lm_loss", "init_cache", "cache_logical_axes",
+           "prefill", "tree_step", "commit_cache"]

@@ -1,0 +1,4 @@
+from .session import make_session_fns
+from .sampler import choose_tokens
+
+__all__ = ["make_session_fns", "choose_tokens"]

@@ -1,0 +1,70 @@
+"""Token choice: greedy argmax or *position-keyed* sampling.
+
+Lossless sampling for tree verification requires the sampled token at output
+position ``p`` to be a deterministic function of (rng_key, p, logits) —
+independent of how many tokens were accepted per step.  We use Gumbel-argmax
+with a key folded on the position: ``argmax(logits/τ + gumbel(fold_in(key, p)))``.
+Step-by-step decoding with the same rule produces bit-identical streams, which
+is what the lossless property tests assert.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.distributed.sharding import active_mesh
+
+
+def _sharded_argmax(logits: jax.Array) -> jax.Array:
+    """§Perf: argmax over vocab-SHARDED logits without XLA's fallback of
+    all-gathering (batch, T, V) — local argmax per model shard, then a tiny
+    (tp, B, T) cross-shard reduction."""
+    mesh = active_mesh()
+    B, T, V = logits.shape
+    if mesh is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tp = mesh.shape.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    if tp <= 1 or V % tp:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    ba = dp_axes if (dp > 1 and B % dp == 0) else None
+
+    def local(lg):                           # (B_loc, T, V/tp)
+        v_loc = lg.shape[-1]
+        li = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        lv = jnp.take_along_axis(lg, li[..., None], axis=-1)[..., 0]
+        gi = li + jax.lax.axis_index("model") * v_loc
+        vs = jax.lax.all_gather(lv, "model")         # (tp, B_loc, T)
+        gs = jax.lax.all_gather(gi, "model")
+        w = jnp.argmax(vs, axis=0)
+        return jnp.take_along_axis(gs, w[None], axis=0)[0]
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=P(ba, None, "model"),
+                     out_specs=P(ba, None), check_rep=False)(logits)
+
+
+def choose_tokens(logits: jax.Array, pred_positions: jax.Array,
+                  sample: bool = False, temperature: float = 1.0,
+                  base_key: Optional[jax.Array] = None) -> jax.Array:
+    """logits (B, T, V); pred_positions (B, T) — the *output* position each
+    slot's logits predict.  Returns (B, T) int32 chosen ids."""
+    if not sample:
+        return _sharded_argmax(logits)
+    assert base_key is not None
+    B, T, V = logits.shape
+    flat_pos = pred_positions.reshape(-1)
+    keys = jax.vmap(lambda p: jax.random.fold_in(base_key, p))(flat_pos)
+    gum = jax.vmap(lambda k: jax.random.gumbel(k, (V,), jnp.float32))(keys)
+    z = logits.astype(jnp.float32).reshape(-1, V) / max(temperature, 1e-6)
+    return jnp.argmax(z + gum, axis=-1).astype(jnp.int32).reshape(B, T)
+
+
+__all__ = ["choose_tokens"]

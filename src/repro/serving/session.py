@@ -1,0 +1,49 @@
+"""Build the jitted StepFns driving a LookaheadEngine for a transformer LM."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import StepFns
+from repro.models import transformer as tx
+from repro.serving.sampler import choose_tokens
+
+
+def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
+                     sample: bool = False, temperature: float = 1.0,
+                     base_key: Optional[jax.Array] = None,
+                     slots: int = 1, pad_id: int = 0) -> StepFns:
+    """Jitted prefill / tree_step / commit closures over ``params``.
+
+    ``slots`` is informational (engine uses tree sizes dynamically; jit
+    retraces per distinct T, which is 1 or 2 shapes in practice).
+    """
+    choose = functools.partial(choose_tokens, sample=sample,
+                               temperature=temperature, base_key=base_key)
+
+    @jax.jit
+    def _prefill(tokens, lens):
+        cache = tx.init_cache(cfg, tokens.shape[0])
+        cache, last_logits = tx.prefill(cfg, params, tokens, lens, cache)
+        chosen = choose(last_logits[:, None, :], lens[:, None])[:, 0]
+        return cache, chosen
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _tree_step(cache, cache_lens, tokens, pos, mask):
+        cache, logits = tx.tree_step(cfg, params, cache, cache_lens,
+                                     tokens, pos, mask)
+        chosen = choose(logits, pos + 1)
+        return cache, chosen
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _commit(cache, cache_lens, gather_idx, n_accept):
+        return tx.commit_cache(cache, cache_lens, gather_idx, n_accept)
+
+    return StepFns(prefill=_prefill, tree_step=_tree_step, commit=_commit,
+                   slots=slots, max_seq_len=cfg.max_seq_len, pad_id=pad_id)
+
+
+__all__ = ["make_session_fns"]

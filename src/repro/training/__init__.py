@@ -1,0 +1,6 @@
+from .optimizer import adamw_init, adamw_update, clip_by_global_norm
+from .train_step import make_train_step
+from .checkpoint import CheckpointManager
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm",
+           "make_train_step", "CheckpointManager"]

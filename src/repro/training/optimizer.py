@@ -1,0 +1,75 @@
+"""AdamW + global-norm clipping, pure JAX pytree implementation.
+
+Optimizer state moments inherit the parameter sharding (pjit shards them
+identically), which combined with fsdp-sharded params gives ZeRO-ish
+optimizer-state sharding for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        if jnp.issubdtype(p.dtype, jnp.floating) else None, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(lambda z: None if z is None
+                                      else jnp.zeros_like(z), zeros))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    leaves = [g for g in jax.tree.leaves(grads) if g is not None]
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: None if g is None else g * scale,
+                        grads, is_leaf=lambda x: x is None), gn
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState, *,
+                 lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.01,
+                 max_grad_norm: Optional[float] = 1.0
+                 ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    if max_grad_norm is not None:
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gn = jnp.zeros(())
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if g is None or m is None:
+            return p, m, v
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), {"grad_norm": gn}
+
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm"]

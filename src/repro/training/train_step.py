@@ -1,0 +1,68 @@
+"""Generic train step factory: loss+grad+AdamW with optional microbatch
+gradient accumulation (lax.scan) and bf16 gradient compression on the
+cross-replica reduce path."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWState, adamw_update
+
+
+def make_train_step(loss_fn: Callable[[Any, Dict], jax.Array], *,
+                    lr: float = 1e-3, weight_decay: float = 0.01,
+                    max_grad_norm: float = 1.0, accum_steps: int = 1,
+                    grad_dtype: Optional[str] = None) -> Callable:
+    """loss_fn(params, batch) -> scalar.
+
+    Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+    With accum_steps > 1, every leading batch-dim array in ``batch`` is split
+    into ``accum_steps`` microbatches scanned sequentially (activation memory
+    / global batch trade-off).  ``grad_dtype`` (e.g. "bfloat16") casts the
+    accumulated gradient — a 2× reduction of cross-replica all-reduce bytes.
+    """
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def step(params, opt_state: AdamWState, batch: Dict):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc, ls = carry
+                loss, g = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b, acc, g)
+                return (acc, ls + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32)
+                if jnp.issubdtype(p.dtype, jnp.floating) else
+                jnp.zeros(p.shape, p.dtype), params)
+            (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.zeros(())),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        if grad_dtype is not None:
+            dt = jnp.dtype(grad_dtype)
+            grads = jax.tree.map(
+                lambda g: g.astype(dt)
+                if jnp.issubdtype(g.dtype, jnp.floating) else g, grads)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay,
+            max_grad_norm=max_grad_norm)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step
+
+
+__all__ = ["make_train_step"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on ONE device (the dry-run sets its own 512-device env in a
+# subprocess / separate invocation — never globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

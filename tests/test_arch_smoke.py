@@ -1,0 +1,134 @@
+"""Per-assigned-architecture smoke tests: REDUCED same-family config, one
+forward / train step on CPU, asserting shapes + finiteness.  The FULL configs
+are exercised via the dry-run only (ShapeDtypeStructs, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfgreg
+from repro.models import transformer as tx
+from repro.training.data import (batched_molecules, random_geometric_graph,
+                                 seq_rec_batch, two_tower_batch,
+                                 wide_deep_batch)
+
+RNG = np.random.RandomState(0)
+LM_ARCHS = ["phi3_mini_3_8b", "qwen2_1_5b", "phi3_medium_14b",
+            "qwen3_moe_30b_a3b", "moonshot_v1_16b_a3b", "antglm_10b"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_and_serve(arch):
+    mod = cfgreg.get_arch(arch)
+    cfg = mod.smoke_config()
+    full = mod.full_config()
+    # smoke keeps family traits
+    assert cfg.moe == full.moe and cfg.qkv_bias == full.qkv_bias
+    params = tx.init_params(cfg, jax.random.key(0))
+    B, S = 2, 16
+    toks = jnp.asarray(RNG.randint(1, cfg.vocab_size, (B, S)), jnp.int32)
+    logits = tx.train_logits(cfg, params, toks)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    loss = tx.lm_loss(cfg, params, toks, toks)
+    assert np.isfinite(float(loss))
+    # serve one tree step
+    cache = tx.init_cache(cfg, B)
+    cache, last = tx.prefill(cfg, params, toks, jnp.full((B,), S, jnp.int32),
+                             cache)
+    T = 5
+    tree_toks = jnp.asarray(RNG.randint(1, cfg.vocab_size, (B, T)), jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)[:, None] + jnp.arange(T)[None, :]
+    mask = jnp.asarray(np.tril(np.ones((T, T), bool))[None].repeat(B, 0))
+    cache, lg = tx.tree_step(cfg, params, cache, jnp.full((B,), S, jnp.int32),
+                             tree_toks, pos, mask)
+    assert lg.shape == (B, T, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_equiformer_smoke():
+    mod = cfgreg.get_arch("equiformer_v2")
+    cfg = mod.smoke_config()
+    from repro.models.gnn import equiformer as eq
+    params = eq.init_params(cfg, jax.random.key(0))
+    g = random_geometric_graph(RNG, 24, cfg.d_feat_in, max_edges=96)
+    out = eq.forward(cfg, params, jnp.asarray(g["node_feat"]),
+                     jnp.asarray(g["positions"]), jnp.asarray(g["edges"]),
+                     jnp.asarray(g["edge_mask"]))
+    assert out["node_out"].shape == (24, cfg.n_out)
+    assert bool(jnp.isfinite(out["node_out"]).all())
+    loss = eq.node_class_loss(cfg, params, {
+        **{k: jnp.asarray(v) for k, v in g.items()},
+        "labels": jnp.asarray(RNG.randint(0, cfg.n_out, (24,)), jnp.int32)})
+    assert np.isfinite(float(loss))
+
+
+def test_wide_deep_smoke():
+    mod = cfgreg.get_arch("wide_deep")
+    cfg = mod.smoke_config()
+    from repro.models.recsys import wide_deep as wd
+    params = wd.init_params(cfg, jax.random.key(0))
+    b = wide_deep_batch(RNG, 8, cfg.n_sparse, cfg.rows_per_table,
+                        cfg.multi_hot, cfg.n_dense)
+    loss = wd.loss(cfg, params, {k: jnp.asarray(v) for k, v in b.items()})
+    assert np.isfinite(float(loss))
+    logits = wd.forward(cfg, params, jnp.asarray(b["sparse_ids"]),
+                        jnp.asarray(b["sparse_mask"]),
+                        jnp.asarray(b["dense"]))
+    assert logits.shape == (8,) and bool(jnp.isfinite(logits).all())
+
+
+def test_two_tower_smoke():
+    mod = cfgreg.get_arch("two_tower_retrieval")
+    cfg = mod.smoke_config()
+    from repro.models.recsys import two_tower as tt
+    params = tt.init_params(cfg, jax.random.key(0))
+    b = two_tower_batch(RNG, 16, cfg.n_user_fields, cfg.n_item_fields,
+                        cfg.rows_per_table)
+    loss = tt.loss(cfg, params, {k: jnp.asarray(v) for k, v in b.items()})
+    assert np.isfinite(float(loss))
+    cand = jnp.asarray(RNG.randn(4096, cfg.tower_dims[-1]).astype(np.float32))
+    scores, idx = tt.score_candidates(cfg, params,
+                                      jnp.asarray(b["user_ids"][:1]), cand,
+                                      k=16)
+    assert scores.shape == (16,) and idx.shape == (16,)
+
+
+@pytest.mark.parametrize("arch,causal", [("bert4rec", False),
+                                         ("sasrec", True)])
+def test_seq_rec_smoke(arch, causal):
+    mod = cfgreg.get_arch(arch)
+    cfg = mod.smoke_config()
+    import importlib
+    m = importlib.import_module(f"repro.models.recsys.{arch}")
+    params = m.init_params(cfg, jax.random.key(0))
+    b = seq_rec_batch(RNG, 4, cfg.seq_len, cfg.n_items, causal=causal)
+    loss = m.loss(cfg, params, {k: jnp.asarray(v) for k, v in b.items()})
+    assert np.isfinite(float(loss))
+    scores = m.serve(cfg, params, jnp.asarray(b["ids"]),
+                     jnp.asarray(b["pad_mask"]))
+    assert scores.shape == (4, cfg.n_items)
+    cand = jnp.asarray(RNG.randint(2, cfg.n_items, (4, 32)), jnp.int32)
+    rank = m.serve(cfg, params, jnp.asarray(b["ids"]),
+                   jnp.asarray(b["pad_mask"]), cand)
+    assert rank.shape == (4, 32)
+
+
+def test_molecule_batched_smoke():
+    mod = cfgreg.get_arch("equiformer_v2")
+    cfg = dataclasses.replace(mod.smoke_config(), n_out=1, node_level=False)
+    from repro.models.gnn import equiformer as eq
+    params = eq.init_params(cfg, jax.random.key(0))
+    b = batched_molecules(RNG, 4, 10, cfg.d_feat_in, 24)
+    loss = eq.energy_loss(cfg, params,
+                          {k: jnp.asarray(v) for k, v in b.items()})
+    assert np.isfinite(float(loss))
+
+
+def test_all_assigned_cells_enumerated():
+    cells = cfgreg.assigned_cells()
+    assert len(cells) == 40
+    archs = {a for a, _ in cells}
+    assert len(archs) == 10

@@ -1,0 +1,105 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.draft import (BUILDERS, build_hierarchical, build_parallel,
+                              build_single)
+from repro.core.verify import verify_accept
+
+branches_strategy = st.lists(
+    st.lists(st.integers(1, 9), min_size=1, max_size=5),
+    min_size=0, max_size=12)
+
+
+def _check_legal(tree):
+    """Invariants: depth = parent depth + 1, mask = ancestor closure."""
+    n = tree.size
+    assert tree.parent[0] == -1 and tree.depth[0] == 0
+    for i in range(1, tree.n_slots):
+        p = tree.parent[i]
+        assert 0 <= p < i
+        assert tree.depth[i] == tree.depth[p] + 1
+    for i in range(n):
+        anc = {i}
+        j = i if i < tree.n_slots else 0
+        while j >= 0:
+            anc.add(j)
+            j = tree.parent[j] if j > 0 else -1
+        anc.add(0)
+        got = set(np.nonzero(tree.tree_mask[i])[0].tolist())
+        assert got == {a for a in anc if a < n}, (i, got, anc)
+
+
+@settings(max_examples=60, deadline=None)
+@given(branches_strategy, st.integers(1, 16))
+def test_property_tree_legality(branches, L):
+    for name, builder in BUILDERS.items():
+        tree = builder(42, branches, None, L)
+        assert tree.size == 1 + L
+        assert 1 <= tree.n_slots <= 1 + L
+        _check_legal(tree)
+
+
+def test_hierarchical_merges_prefixes():
+    tree = build_hierarchical(7, [[1], [1, 2], [1, 3]], None, 8)
+    # slots: root, 1, 2, 3  (prefix [1] stored once)
+    assert tree.n_slots == 4
+    par = build_parallel(7, [[1], [1, 2], [1, 3]], None, 8)
+    # maximal paths [1,2],[1,3] stored independently: 1+2+2
+    assert par.n_slots == 5
+
+
+def test_single_is_chain():
+    tree = build_single(7, [[1, 2, 3], [4]], None, 8)
+    assert tree.n_slots == 4
+    assert list(tree.parent[1:4]) == [0, 1, 2]
+
+
+def test_budget_respected():
+    tree = build_hierarchical(7, [[i] for i in range(50)], None, 10)
+    assert tree.n_slots == 11
+
+
+def test_verify_worst_case_accepts_one():
+    tree = build_hierarchical(7, [[1], [2]], None, 4)
+    chosen = np.array([99, 0, 0, 0, 0])   # no draft matches 99
+    acc, slots = verify_accept(tree, chosen)
+    assert acc == [99] and slots == [0]
+
+
+def test_verify_walks_longest_path():
+    tree = build_hierarchical(7, [[1, 2, 3]], None, 4)
+    # chosen[root]=1 matches slot1; chosen[slot1]=2 matches slot2; ...
+    chosen = np.array([1, 2, 3, 4, 0])
+    acc, slots = verify_accept(tree, chosen)
+    assert acc == [1, 2, 3, 4]
+    assert slots == [0, 1, 2, 3]
+
+
+def test_verify_branches_choose_matching_child():
+    tree = build_hierarchical(7, [[1, 5], [2, 6]], None, 6)
+    # root chooses 2 → the [2, 6] branch; chosen at that slot = 6 → accept
+    c = np.zeros(tree.size, dtype=np.int64)
+    c[0] = 2
+    slot2 = [i for i in range(tree.n_slots) if tree.tokens[i] == 2][0]
+    c[slot2] = 6
+    slot6 = [i for i in range(tree.n_slots) if tree.tokens[i] == 6][0]
+    c[slot6] = 11
+    acc, slots = verify_accept(tree, c)
+    assert acc == [2, 6, 11]
+    assert slots == [0, slot2, slot6]
+
+
+@settings(max_examples=60, deadline=None)
+@given(branches_strategy, st.integers(1, 12),
+       st.lists(st.integers(0, 9), min_size=13, max_size=13))
+def test_property_verify_sound(branches, L, chosen):
+    tree = build_hierarchical(3, branches, None, L)
+    chosen = np.array(chosen[:tree.size] + [0] * max(0, tree.size - len(chosen)))
+    acc, slots = verify_accept(tree, chosen)
+    assert len(acc) >= 1 and len(acc) == len(slots)
+    assert acc[0] == chosen[0] and slots[0] == 0
+    # each committed slot's token equals its parent's chosen id
+    for j in range(1, len(slots)):
+        s = slots[j]
+        assert tree.tokens[s] == chosen[slots[j - 1]]
+        assert tree.parent[s] == slots[j - 1]

@@ -1,0 +1,188 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn import equiformer as eq
+from repro.models.gnn import sampler as smp
+from repro.models.gnn import so3
+from repro.models.recsys import embedding as E
+
+RNG = np.random.RandomState(0)
+
+
+# ------------------------------------------------------------------ SO(3)
+def _rand_rot(n, rng):
+    A = rng.randn(n, 3, 3)
+    Q = np.linalg.qr(A)[0]
+    Q[:, :, 0] *= np.sign(np.linalg.det(Q))[:, None]
+    return Q
+
+
+def test_wigner_orthogonal_and_composes():
+    R1 = jnp.asarray(_rand_rot(4, RNG))
+    R2 = jnp.asarray(_rand_rot(4, RNG))
+    b1 = so3.wigner_blocks(R1, 6)
+    b2 = so3.wigner_blocks(R2, 6)
+    b12 = so3.wigner_blocks(jnp.einsum("eij,ejk->eik", R1, R2), 6)
+    for l in range(7):
+        eye = np.eye(2 * l + 1)
+        np.testing.assert_allclose(
+            np.asarray(jnp.einsum("eij,ekj->eik", b1[l], b1[l])),
+            np.broadcast_to(eye, (4,) + eye.shape), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(b1[l] @ b2[l]),
+                                   np.asarray(b12[l]), atol=2e-5)
+
+
+def test_wigner_action_on_sph_harm():
+    R = jnp.asarray(_rand_rot(3, RNG))
+    r = RNG.randn(5, 3)
+    r /= np.linalg.norm(r, axis=-1, keepdims=True)
+    r = jnp.asarray(r)
+    blocks = so3.wigner_blocks(R, 4)
+    Y = so3.real_sph_harm(r, 4)
+    YR = so3.real_sph_harm(jnp.einsum("eij,nj->eni", R, r), 4)
+    off = 0
+    for l in range(5):
+        n = 2 * l + 1
+        np.testing.assert_allclose(
+            np.asarray(YR[..., off:off + n]),
+            np.asarray(jnp.einsum("eij,nj->eni", blocks[l],
+                                  Y[:, off:off + n])), atol=3e-5)
+        off += n
+
+
+def test_rotation_to_z_including_poles():
+    v = RNG.randn(10, 3)
+    v[0] = [0, 0, 1]
+    v[1] = [0, 0, -1]
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    R = so3.rotation_to_z(jnp.asarray(v))
+    out = np.asarray(jnp.einsum("eij,ej->ei", R, jnp.asarray(v)))
+    np.testing.assert_allclose(out, np.broadcast_to([0, 0, 1.0], out.shape),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.linalg.det(np.asarray(R)), 1.0, atol=1e-5)
+
+
+# ------------------------------------------------------------- equiformer
+@pytest.fixture(scope="module")
+def eq_setup():
+    cfg = eq.EquiformerConfig(n_layers=2, channels=16, l_max=2, m_max=1,
+                              n_heads=4, d_feat_in=8, n_rbf=8, n_out=3)
+    params = eq.init_params(cfg, jax.random.key(0))
+    N, Ed = 20, 60
+    g = {"node_feat": jnp.asarray(RNG.randn(N, 8).astype(np.float32)),
+         "positions": jnp.asarray(RNG.randn(N, 3).astype(np.float32)),
+         "edges": jnp.asarray(RNG.randint(0, N, (Ed, 2)), jnp.int32),
+         "edge_mask": jnp.ones((Ed,), bool)}
+    return cfg, params, g
+
+
+def test_rotation_invariance(eq_setup):
+    cfg, params, g = eq_setup
+    out = eq.forward(cfg, params, g["node_feat"], g["positions"],
+                     g["edges"], g["edge_mask"])
+    Q = _rand_rot(1, RNG)[0].astype(np.float32)
+    out_r = eq.forward(cfg, params, g["node_feat"],
+                       g["positions"] @ jnp.asarray(Q.T), g["edges"],
+                       g["edge_mask"])
+    np.testing.assert_allclose(np.asarray(out["node_out"]),
+                               np.asarray(out_r["node_out"]), atol=5e-4)
+
+
+def test_translation_invariance(eq_setup):
+    cfg, params, g = eq_setup
+    out = eq.forward(cfg, params, g["node_feat"], g["positions"],
+                     g["edges"], g["edge_mask"])
+    out_t = eq.forward(cfg, params, g["node_feat"],
+                       g["positions"] + jnp.asarray([3.0, -1.0, 2.0]),
+                       g["edges"], g["edge_mask"])
+    np.testing.assert_allclose(np.asarray(out["node_out"]),
+                               np.asarray(out_t["node_out"]), atol=5e-4)
+
+
+def test_chunked_equals_dense(eq_setup):
+    cfg, params, g = eq_setup
+    out = eq.forward(cfg, params, g["node_feat"], g["positions"],
+                     g["edges"], g["edge_mask"])
+    cfg_c = dataclasses.replace(cfg, edge_chunk=20)
+    out_c = eq.forward(cfg_c, params, g["node_feat"], g["positions"],
+                       g["edges"], g["edge_mask"])
+    np.testing.assert_allclose(np.asarray(out["node_out"]),
+                               np.asarray(out_c["node_out"]), atol=1e-4)
+
+
+def test_edge_mask_drops_padding(eq_setup):
+    cfg, params, g = eq_setup
+    # adding masked-out junk edges must not change anything
+    junk = jnp.asarray(RNG.randint(0, 20, (16, 2)), jnp.int32)
+    edges2 = jnp.concatenate([g["edges"], junk])
+    mask2 = jnp.concatenate([g["edge_mask"], jnp.zeros((16,), bool)])
+    o1 = eq.forward(cfg, params, g["node_feat"], g["positions"], g["edges"],
+                    g["edge_mask"])
+    o2 = eq.forward(cfg, params, g["node_feat"], g["positions"], edges2,
+                    mask2)
+    np.testing.assert_allclose(np.asarray(o1["node_out"]),
+                               np.asarray(o2["node_out"]), atol=1e-4)
+
+
+# ---------------------------------------------------------------- sampler
+def test_neighbor_sampler_validity():
+    rng = np.random.RandomState(1)
+    full = rng.randint(0, 300, (4000, 2))
+    g = smp.CSRGraph.from_edges(full, 300)
+    nodes, e, m, slots = smp.sample_subgraph(g, np.arange(16), [5, 3], rng)
+    ne = int(m.sum())
+    assert ne > 0
+    edge_set = {(int(a), int(b)) for a, b in full}
+    for i in range(ne):
+        s, d = int(e[i, 0]), int(e[i, 1])
+        assert (int(nodes[s]), int(nodes[d])) in edge_set
+    # seeds are at their reported slots
+    for seed, slot in zip(range(16), slots):
+        assert int(nodes[slot]) == seed
+
+
+# ------------------------------------------------------------- embeddings
+def test_embedding_bag_combiners():
+    t = jnp.asarray(RNG.randn(50, 8).astype(np.float32))
+    ids = jnp.asarray(RNG.randint(0, 50, (6, 4)), jnp.int32)
+    m = jnp.asarray(RNG.rand(6, 4) > 0.3)
+    s = E.embedding_bag(t, ids, mask=m, combiner="sum")
+    mean = E.embedding_bag(t, ids, mask=m, combiner="mean")
+    mx = E.embedding_bag(t, ids, mask=m, combiner="max")
+    emb = np.asarray(jnp.take(t, ids, axis=0))
+    mm = np.asarray(m)[..., None]
+    np.testing.assert_allclose(np.asarray(s), (emb * mm).sum(1), atol=1e-5)
+    denom = np.maximum(mm.sum(1), 1.0)
+    np.testing.assert_allclose(np.asarray(mean), (emb * mm).sum(1) / denom,
+                               atol=1e-5)
+    ref_max = np.where(mm > 0, emb, -np.inf).max(1)
+    ref_max = np.where(np.isfinite(ref_max), ref_max, 0.0)
+    np.testing.assert_allclose(np.asarray(mx), ref_max, atol=1e-5)
+
+
+def test_embedding_bag_ragged_matches_fixed():
+    t = jnp.asarray(RNG.randn(30, 4).astype(np.float32))
+    flat = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+    seg = jnp.asarray([0, 0, 1, 1, 1], jnp.int32)
+    out = E.embedding_bag_ragged(t, flat, seg, 3)
+    tn = np.asarray(t)
+    np.testing.assert_allclose(np.asarray(out)[0], tn[1] + tn[2], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out)[1], tn[3] + tn[4] + tn[5],
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out)[2], 0.0, atol=1e-6)
+
+
+def test_hashed_lookup_shapes_and_determinism():
+    q = jnp.asarray(RNG.randn(16, 8).astype(np.float32))
+    r = jnp.asarray(RNG.randn(10, 8).astype(np.float32))
+    ids = jnp.asarray([0, 9, 17, 159], jnp.int32)
+    out = E.hashed_lookup(q, r, ids)
+    assert out.shape == (4, 8)
+    # same id → same embedding; distinct ids under 160 → (quotient, rem) pairs
+    out2 = E.hashed_lookup(q, r, ids)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))

@@ -1,0 +1,130 @@
+"""THE paper claim: lookahead generation is bit-identical to step-by-step
+decoding (greedy and fixed-key sampling), while taking fewer steps."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LookaheadConfig, LookaheadEngine, baseline_config,
+                        llma_config, reference_decode)
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.session import make_session_fns
+from repro.training.data import PROFILES, SyntheticCorpus
+
+
+@pytest.fixture(scope="module")
+def dense_fns():
+    cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                            d_ff=128, vocab_size=101, max_seq_len=320)
+    params = init_params(cfg, jax.random.key(0))
+    return make_session_fns(cfg, params, slots=17)
+
+
+@pytest.fixture(scope="module")
+def moe_fns():
+    cfg = TransformerConfig(n_layers=2, d_model=48, n_heads=4, n_kv_heads=4,
+                            vocab_size=67, max_seq_len=320, moe=True,
+                            n_experts=4, top_k=2, moe_d_ff=32,
+                            n_shared_experts=1, moe_impl="ref")
+    params = init_params(cfg, jax.random.key(1))
+    return make_session_fns(cfg, params, slots=17)
+
+
+@pytest.fixture(scope="module")
+def sample_fns():
+    cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                            d_ff=128, vocab_size=101, max_seq_len=320)
+    params = init_params(cfg, jax.random.key(2))
+    return make_session_fns(cfg, params, sample=True, temperature=0.8,
+                            base_key=jax.random.key(7), slots=17)
+
+
+def _prompts(n, lo=8, hi=40, vocab=100, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, vocab, size=rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("strategy", ["hierarchical", "parallel", "single"])
+def test_lossless_greedy_all_strategies(dense_fns, strategy):
+    for i, prompt in enumerate(_prompts(3, seed=3)):
+        ref = reference_decode(dense_fns, prompt, 40)
+        eng = LookaheadEngine(dense_fns, LookaheadConfig(
+            decoding_length=16, branch_length=6, strategy=strategy))
+        eng.warmup([ref])
+        out = eng.generate(prompt, 40)
+        assert out.tokens == ref, (strategy, i)
+        assert out.stats.steps <= len(ref)        # never MORE steps
+
+
+def test_lossless_moe(moe_fns):
+    for prompt in _prompts(3, vocab=66, seed=4):
+        ref = reference_decode(moe_fns, prompt, 32)
+        eng = LookaheadEngine(moe_fns, LookaheadConfig(decoding_length=12,
+                                                       branch_length=5))
+        eng.warmup([ref])
+        out = eng.generate(prompt, 32)
+        assert out.tokens == ref
+
+
+def test_lossless_sampling(sample_fns):
+    for prompt in _prompts(3, seed=5):
+        ref = reference_decode(sample_fns, prompt, 32)
+        eng = LookaheadEngine(sample_fns, LookaheadConfig(decoding_length=12,
+                                                          branch_length=5))
+        eng.warmup([ref])
+        out = eng.generate(prompt, 32)
+        assert out.tokens == ref
+
+
+def test_lossless_batched(dense_fns):
+    prompts = _prompts(4, seed=6)
+    refs = [reference_decode(dense_fns, p, 30) for p in prompts]
+    eng = LookaheadEngine(dense_fns, LookaheadConfig(decoding_length=16,
+                                                     branch_length=6))
+    eng.warmup(refs)
+    outs = eng.generate_batch(prompts, 30)
+    for o, r in zip(outs, refs):
+        assert o.tokens == r
+
+
+def test_trie_state_never_corrupts_output(dense_fns):
+    """Serving many different requests through ONE engine (shared trie) must
+    stay lossless for every request — the deployment invariant."""
+    eng = LookaheadEngine(dense_fns, LookaheadConfig(decoding_length=16,
+                                                     branch_length=6))
+    for prompt in _prompts(6, seed=7):
+        ref = reference_decode(dense_fns, prompt, 24)
+        out = eng.generate(prompt, 24)
+        assert out.tokens == ref
+
+
+def test_eos_stops_generation():
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=13, max_seq_len=320)
+    params = init_params(cfg, jax.random.key(3))
+    fns = make_session_fns(cfg, params, slots=9)
+    prompt = [1, 2, 3]
+    ref = reference_decode(fns, prompt, 50, eos_id=5)
+    eng = LookaheadEngine(fns, LookaheadConfig(decoding_length=8,
+                                               branch_length=4), eos_id=5)
+    out = eng.generate(prompt, 50)
+    assert out.tokens == ref
+    if 5 in ref:
+        assert ref.index(5) == len(ref) - 1
+
+
+def test_speedup_on_templated_corpus(dense_fns):
+    """On a corpus with n-gram reuse the steps-compression must beat 1.3x
+    once the trie is warm (paper Fig. 6)."""
+    corpus = SyntheticCorpus(PROFILES["antrag"], 100, seed=9)
+    eng = LookaheadEngine(dense_fns, LookaheadConfig(decoding_length=24,
+                                                     branch_length=8))
+    # warm with model outputs for corpus prompts
+    prompts = [corpus.sample()[0][:48] for _ in range(4)]
+    for p in prompts:
+        eng.generate(p, 40)
+    out = eng.generate(prompts[0], 40)      # repeat seen prompt
+    assert out.stats.edl > 1.3, out.stats

@@ -1,0 +1,159 @@
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import TransformerConfig, init_params, lm_loss
+from repro.training import checkpoint as C
+from repro.training import fault_tolerance as F
+from repro.training.data import PROFILES, SyntheticCorpus, lm_train_batches
+from repro.training.optimizer import adamw_init, clip_by_global_norm
+from repro.training.train_step import make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = TransformerConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                            d_ff=64, vocab_size=64)
+    params = init_params(cfg, jax.random.key(0))
+    loss = lambda p, b: lm_loss(cfg, p, b["tokens"], b["labels"])
+    return cfg, params, loss
+
+
+def test_overfit_single_batch(tiny_lm):
+    cfg, params, loss = tiny_lm
+    step = jax.jit(make_train_step(loss, lr=3e-3))
+    opt = adamw_init(params)
+    b = {k: jnp.asarray(v) for k, v in
+         next(lm_train_batches(64, 8, 16, seed=0)).items()}
+    first = None
+    for i in range(25):
+        params, opt, m = step(params, opt, b)
+        first = first or float(m["loss"])
+    assert float(m["loss"]) < first - 0.5
+
+
+def test_grad_accum_equivalence(tiny_lm):
+    cfg, params, loss = tiny_lm
+    b = {k: jnp.asarray(v) for k, v in
+         next(lm_train_batches(64, 8, 16, seed=1)).items()}
+    s1 = jax.jit(make_train_step(loss, lr=1e-3, accum_steps=1))
+    s2 = jax.jit(make_train_step(loss, lr=1e-3, accum_steps=4))
+    p1, o1, m1 = s1(params, adamw_init(params), b)
+    p2, o2, m2 = s2(params, adamw_init(params), b)
+    # same data => same mean loss & near-identical update
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    d = max(float(jnp.abs(a - c).max()) for a, c in
+            zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 1e-4, d
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_checkpoint_roundtrip_retention_integrity(tiny_lm):
+    cfg, params, _ = tiny_lm
+    with tempfile.TemporaryDirectory() as d:
+        mgr = C.CheckpointManager(d, keep=2)
+        opt = adamw_init(params)
+        mgr.save(1, {"p": params, "o": opt})
+        mgr.save(5, {"p": params, "o": opt}, blocking=False)
+        mgr.wait()
+        mgr.save(9, {"p": params, "o": opt})
+        assert mgr.all_steps() == [5, 9]
+        restored, step = mgr.restore({"p": params, "o": opt})
+        assert step == 9
+        for a, b in zip(jax.tree.leaves(restored["p"]),
+                        jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # corrupt → integrity check raises
+        path = os.path.join(d, "step_0000000009", "arrays.npz")
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        with pytest.raises(Exception):
+            mgr.restore({"p": params, "o": opt}, step=9)
+
+
+def test_resume_from_latest_continues_training(tiny_lm):
+    cfg, params, loss = tiny_lm
+    step = jax.jit(make_train_step(loss, lr=1e-3))
+    b = {k: jnp.asarray(v) for k, v in
+         next(lm_train_batches(64, 4, 16, seed=2)).items()}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = C.CheckpointManager(d)
+        opt = adamw_init(params)
+        for i in range(3):
+            params, opt, _ = step(params, opt, b)
+        mgr.save(3, {"p": params, "o": opt})
+        # simulate crash + restart
+        restored, st = mgr.restore({"p": params, "o": opt})
+        assert st == 3
+        p2, o2, m = step(restored["p"], restored["o"], b)
+        assert np.isfinite(float(m["loss"]))
+        assert int(o2.step) == 4
+
+
+def test_preemption_checkpoint_flow(tiny_lm):
+    cfg, params, loss = tiny_lm
+    h = F.PreemptionHandler().install()
+    step = jax.jit(make_train_step(loss, lr=1e-3))
+    opt = adamw_init(params)
+    b = {k: jnp.asarray(v) for k, v in
+         next(lm_train_batches(64, 4, 16, seed=3)).items()}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = C.CheckpointManager(d)
+        stopped_at = None
+        for i in range(10):
+            params, opt, _ = step(params, opt, b)
+            if i == 4:
+                h.trigger()          # deliver "SIGTERM"
+            if h.preempted:
+                mgr.save(i + 1, {"p": params})
+                stopped_at = i + 1
+                break
+        assert stopped_at == 5
+        assert mgr.latest_step() == 5
+    h.uninstall()
+
+
+def test_straggler_and_retry():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient collective failure")
+        return 42
+
+    assert F.retry(flaky, attempts=4, base_delay=0.001) == 42
+    with pytest.raises(F.StragglerTimeout):
+        F.run_with_timeout(lambda: time.sleep(1.0), 0.05, retries=1)
+    assert F.run_with_timeout(lambda: 7, 1.0) == 7
+
+
+def test_elastic_world_shapes():
+    assert F.elastic_world(512, 16, prefer_pods=2) == (2, 16, 16)
+    assert F.elastic_world(384, 16, prefer_pods=2) == (2, 8, 16)   # lost chips
+    assert F.elastic_world(16, 16) == (1, 1, 16)
+    with pytest.raises(ValueError):
+        F.elastic_world(8, 16)
+
+
+def test_corpus_profiles_stats():
+    for name, prof in PROFILES.items():
+        c = SyntheticCorpus(prof, 512, seed=1)
+        pr, ans = c.sample()
+        assert len(pr) == prof.prompt_len
+        assert len(ans) == prof.answer_len
+    # antrag must have much higher prompt-copy rate than dolly
+    assert PROFILES["antrag"].copy_from_prompt > \
+        PROFILES["dolly"].copy_from_prompt

@@ -1,0 +1,95 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trie import TrieTree
+
+
+def test_insert_retrieve_roundtrip():
+    t = TrieTree(capacity=1000)
+    t.insert([1, 2, 3])
+    t.insert([1, 2, 4])
+    t.insert([9, 9])
+    branches, scores = t.retrieve([5, 1], decoding_length=8)
+    paths = {tuple(b) for b in branches}
+    assert (2,) in paths and (2, 3) in paths and (2, 4) in paths
+    assert len(scores) == len(branches)
+
+
+def test_multi_stage_backoff():
+    t = TrieTree(capacity=1000)
+    t.insert([7, 8, 9])
+    # context suffix [3, 7] fails at len 2, backs off to [7]
+    branches, _ = t.retrieve([3, 7], decoding_length=8)
+    assert (8,) in {tuple(b) for b in branches}
+
+
+def test_frequency_ranking_and_budget():
+    t = TrieTree(capacity=1000)
+    for _ in range(5):
+        t.insert([1, 2])
+    t.insert([1, 3])
+    branches, scores = t.retrieve([1], decoding_length=1)
+    assert branches[0] == [2]          # highest frequency wins the budget
+    assert len(branches) == 1
+
+
+def test_prompt_boost():
+    t = TrieTree(capacity=1000, prompt_boost=100.0)
+    for _ in range(5):
+        t.insert([1, 2])               # output branch, freq 5
+    t.insert([1, 3], request_id=42)    # prompt branch, freq 1 but boosted
+    branches, _ = t.retrieve([1], decoding_length=1)
+    assert branches[0] == [3]
+
+
+def test_eliminate_removes_prompt_branches():
+    t = TrieTree(capacity=1000)
+    t.insert([1, 2, 3], request_id=7)
+    assert len(t) == 3
+    t.eliminate(7)
+    assert len(t) == 0
+    # persistent branches survive other requests' elimination
+    t.insert([4, 5])
+    t.eliminate(7)
+    assert len(t) == 2
+
+
+def test_prune_decay():
+    t = TrieTree(capacity=8, decay=0.5)
+    for i in range(20):
+        t.insert([i, i + 100, i + 200])   # push over capacity repeatedly
+    assert len(t) <= 8 * 3  # prune keeps it bounded (runs during insert)
+
+
+def test_ngram_insert_window():
+    t = TrieTree(capacity=10_000)
+    t.insert_ngrams([1, 2, 3, 4, 5], branch_length=3)
+    assert t.match([3, 4, 5]) is not None
+    assert t.match([1, 2, 3]) is not None
+    assert t.match([1, 3]) is None
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 20), min_size=1, max_size=6),
+                min_size=1, max_size=30))
+def test_property_retrieved_paths_exist(branch_sets):
+    t = TrieTree(capacity=100_000)
+    for b in branch_sets:
+        t.insert(b)
+    for ctx in ([branch_sets[0][0]], [0], [20]):
+        branches, _ = t.retrieve(ctx, decoding_length=16)
+        for br in branches:
+            assert t.match(list(ctx[-1:]) + br) is not None or \
+                t.match(br) is not None
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.lists(st.integers(0, 50), min_size=2,
+                                   max_size=40))
+def test_property_capacity_bound(cap_factor, tokens):
+    cap = cap_factor * 8
+    t = TrieTree(capacity=cap, decay=0.0)
+    t.insert_ngrams(tokens, branch_length=4)
+    # decay=0 prune removes every prunable node when tripped
+    assert len(t) <= max(cap, 4)
