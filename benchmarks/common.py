@@ -47,14 +47,9 @@ PROFILE_PHASE = {"antrag": 2, "humaneval": 3, "gsm8k": 5, "dolly": 11}
 
 
 def make_guided_session_fns(cfg, params, *, phase: int, seed: int = 0,
-                            slots: int = 33, pad_id: int = 0):
-    import functools
-
+                            slots: int = 33, pad_id: int = 0,
+                            prefill_len: Optional[int] = None):
     import jax.numpy as jnp
-
-    from repro.core.engine import StepFns
-    from repro.models import transformer as tx
-    from repro.serving.sampler import choose_tokens
 
     rng = np.random.RandomState(seed + 1000 * phase)
     # 70% of (phase, token) entries share a phase-independent successor —
@@ -70,27 +65,8 @@ def make_guided_session_fns(cfg, params, *, phase: int, seed: int = 0,
         return logits + 1e4 * jax.nn.one_hot(nxt, cfg.vocab_size,
                                              dtype=logits.dtype)
 
-    @jax.jit
-    def _prefill(tokens, lens):
-        cache = tx.init_cache(cfg, tokens.shape[0])
-        cache, last_logits = tx.prefill(cfg, params, tokens, lens, cache)
-        last_tok = jnp.take_along_axis(tokens, (lens - 1)[:, None],
-                                       axis=1)
-        lg = bias(last_logits[:, None, :], last_tok, (lens - 1)[:, None])
-        return cache, choose_tokens(lg, lens[:, None])[:, 0]
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def _tree_step(cache, cache_lens, tokens, pos, mask):
-        cache, logits = tx.tree_step(cfg, params, cache, cache_lens,
-                                     tokens, pos, mask)
-        return cache, choose_tokens(bias(logits, tokens, pos), pos + 1)
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def _commit(cache, cache_lens, gather_idx, n_accept):
-        return tx.commit_cache(cache, cache_lens, gather_idx, n_accept)
-
-    return StepFns(prefill=_prefill, tree_step=_tree_step, commit=_commit,
-                   slots=slots, max_seq_len=cfg.max_seq_len, pad_id=pad_id)
+    return make_session_fns(cfg, params, slots=slots, pad_id=pad_id,
+                            prefill_len=prefill_len, logits_transform=bias)
 
 
 @dataclass

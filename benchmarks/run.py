@@ -19,6 +19,7 @@ BENCHES = [
     ("table4", "benchmarks.bench_table4_capacity"),
     ("table5", "benchmarks.bench_table5_memory"),
     ("table12", "benchmarks.bench_table12_batch"),
+    ("contbatch", "benchmarks.bench_continuous_batch"),
     ("fig1", "benchmarks.bench_fig1_cdl"),
     ("fig6", "benchmarks.bench_fig6_warmup"),
 ]

@@ -1,6 +1,10 @@
 """Lookahead core: trie-based lossless multi-branch speculative decoding."""
-from .draft import BUILDERS, DraftTree, build_hierarchical, build_parallel, build_single
-from .engine import GenStats, LookaheadEngine, RequestResult, StepFns, reference_decode
+from .draft import (BUILDERS, DraftTree, build_hierarchical, build_parallel,
+                    build_single, repad)
+from .engine import LookaheadEngine, reference_decode
+from .request import (GenStats, RequestResult, RequestState, StepFns,
+                      build_draft_tree, idle_tree, trie_admit, trie_retire,
+                      trie_stream)
 from .single_branch import baseline_config, llma_config
 from .strategies import LookaheadConfig
 from .trie import TrieTree
@@ -8,7 +12,9 @@ from .verify import verify_accept, verify_accept_batch
 
 __all__ = [
     "BUILDERS", "DraftTree", "build_hierarchical", "build_parallel",
-    "build_single", "GenStats", "LookaheadEngine", "RequestResult", "StepFns",
-    "reference_decode", "baseline_config", "llma_config", "LookaheadConfig",
-    "TrieTree", "verify_accept", "verify_accept_batch",
+    "build_single", "repad", "GenStats", "LookaheadEngine", "RequestResult",
+    "RequestState", "StepFns", "build_draft_tree", "idle_tree", "trie_admit",
+    "trie_retire", "trie_stream", "reference_decode", "baseline_config",
+    "llma_config", "LookaheadConfig", "TrieTree", "verify_accept",
+    "verify_accept_batch",
 ]

@@ -146,6 +146,20 @@ def build_single(root_token: int, branches: Sequence[Sequence[int]],
     return _finalize(tokens, parent, total, pad_id)
 
 
+def repad(tree: DraftTree, total: int, pad_id: int = 0) -> DraftTree:
+    """Re-pad a draft tree to exactly ``total`` slots (fixed device shapes).
+
+    The serving loops compile their tree step for one width T; a config whose
+    ``decoding_length`` is smaller than the compiled width just carries extra
+    padded slots (never verified, mask = self+root only).
+    """
+    if tree.size == total:
+        return tree
+    n = min(tree.n_slots, total)
+    return _finalize(list(tree.tokens[:n]), list(tree.parent[:n]), total,
+                     pad_id)
+
+
 def _maximal_paths(paths: Sequence[Tuple[int, ...]]) -> List[Tuple[int, ...]]:
     """Drop paths that are prefixes of another path; keep input order."""
     out: List[Tuple[int, ...]] = []
@@ -170,4 +184,4 @@ BUILDERS = {
 }
 
 __all__ = ["DraftTree", "build_hierarchical", "build_parallel",
-           "build_single", "BUILDERS"]
+           "build_single", "repad", "BUILDERS"]

@@ -1,6 +1,7 @@
-"""LookaheadEngine — the serving loop tying trie, draft, model and VA together.
+"""LookaheadEngine — the serving entry point tying trie, draft, model and VA
+together.
 
-The engine is model-agnostic: it drives three jitted device functions built by
+The engine is model-agnostic: it drives jitted device functions built by
 ``repro.serving.session.make_session_fns`` (or any object satisfying
 ``StepFns``), and owns the host-side state (trie, per-request bookkeeping,
 statistics).  One engine instance serves many requests and keeps its trie warm
@@ -17,54 +18,36 @@ Step anatomy (greedy; sample mode replaces argmax with position-keyed sample):
 
 Worst case: no draft matched ⇒ accepted == [chosen[root]] ⇒ identical to
 step-by-step decoding.  Best case: len(accepted) == 1 + draft tree depth.
+
+``generate`` / ``generate_batch`` are thin wrappers over the slot-based
+``ContinuousScheduler`` (serving/scheduler.py) whenever the StepFns support
+per-slot admission; ``generate_batch_lockstep`` keeps the legacy all-requests
+-step-together loop (the baseline the continuous-batching benchmark compares
+against).  Both loops share the per-request primitives in core/request.py, so
+losslessness holds identically on either path.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Union
 
 import numpy as np
 
-from .draft import BUILDERS, DraftTree, _finalize
+from .request import (GenStats, RequestResult, RequestState, StepFns,
+                      build_draft_tree, idle_tree, trie_admit, trie_retire,
+                      trie_stream)
 from .strategies import LookaheadConfig
 from .trie import TrieTree
 from .verify import verify_accept_batch
 
-
-@dataclass
-class StepFns:
-    """Device functions the engine drives (all jit-compiled, fixed shapes).
-
-    prefill(tokens(B,S) i32, lens(B,) i32) -> (cache, chosen_root(B,) i32)
-    tree_step(cache, cache_lens(B,), tokens(B,T), pos(B,T), mask(B,T,T))
-        -> (cache, chosen(B,T) i32)
-    commit(cache, cache_lens(B,), gather_idx(B,T), n_accept(B,))
-        -> (cache, new_lens(B,))
-    """
-    prefill: Callable
-    tree_step: Callable
-    commit: Callable
-    slots: int            # T = 1 + decoding_length
-    max_seq_len: int
-    pad_id: int = 0
+MaxNew = Union[int, Sequence[int]]
 
 
-@dataclass
-class GenStats:
-    steps: int = 0
-    tokens: int = 0
-    dropped_slots: int = 0    # draft tokens computed but rejected
-
-    @property
-    def edl(self) -> float:
-        """Mean accepted tokens per step (paper: effective decoding length)."""
-        return self.tokens / max(self.steps, 1)
-
-
-@dataclass
-class RequestResult:
-    tokens: List[int]
-    stats: GenStats
+def _budgets(max_new_tokens: MaxNew, n: int) -> List[int]:
+    if isinstance(max_new_tokens, (int, np.integer)):
+        return [int(max_new_tokens)] * n
+    budgets = [int(m) for m in max_new_tokens]
+    assert len(budgets) == n, (len(budgets), n)
+    return budgets
 
 
 class LookaheadEngine:
@@ -86,18 +69,14 @@ class LookaheadEngine:
         for toks in corpora:
             self.trie.insert_ngrams(toks, self.config.branch_length)
 
-    # ----------------------------------------------------------------- drafts
-    def _build_tree(self, output: Sequence[int]) -> DraftTree:
+    # ------------------------------------------------------------------ width
+    @property
+    def tree_width(self) -> int:
+        """Device step width T the engine drives (1 in plain-decoding mode)."""
         cfg = self.config
-        root = int(output[-1])
         if cfg.strategy == "none" or cfg.decoding_length == 0:
-            return _finalize([root], [-1], 1, self.fns.pad_id)
-        branches, scores = self.trie.retrieve(
-            output, decoding_length=cfg.decoding_length,
-            max_prefix_len=cfg.max_prefix_len,
-            min_matched_tokens=cfg.min_matched_tokens)
-        return BUILDERS[cfg.strategy](root, branches, scores,
-                                      cfg.decoding_length, self.fns.pad_id)
+            return 1
+        return self.fns.slots
 
     # --------------------------------------------------------------- generate
     def generate(self, prompt: Sequence[int], max_new_tokens: int,
@@ -106,108 +85,116 @@ class LookaheadEngine:
         return res[0]
 
     def generate_batch(self, prompts: Sequence[Sequence[int]],
-                       max_new_tokens: int) -> List[RequestResult]:
+                       max_new_tokens: MaxNew) -> List[RequestResult]:
+        """Serve ``prompts`` to completion; per-request budgets allowed.
+
+        Routes through the continuous scheduler (one lane per prompt, all
+        admitted up front) when the StepFns support slot serving; otherwise
+        falls back to the legacy lock-step loop.  Output tokens are identical
+        either way (lossless per request).
+        """
+        if not self.fns.supports_slot_serving:
+            return self.generate_batch_lockstep(prompts, max_new_tokens)
+        prefill_len = self.fns.prefill_len or max(len(p) for p in prompts)
+        if prefill_len + self.tree_width > self.fns.max_seq_len:
+            # near-max-length prompts: the scheduler refuses admission
+            # (no room for a tree step); the lock-step loop degrades
+            # gracefully to a 1-token result instead
+            return self.generate_batch_lockstep(prompts, max_new_tokens)
+        from repro.serving.scheduler import ContinuousScheduler
+        budgets = _budgets(max_new_tokens, len(prompts))
+        sched = ContinuousScheduler(
+            self.fns, self.config, lanes=len(prompts), trie=self.trie,
+            eos_id=self.eos_id, prefill_len=prefill_len,
+            rid_start=self._next_request_id)
+        for p, m in zip(prompts, budgets):
+            sched.submit(p, m)
+        results = sched.run()
+        self._next_request_id = sched.next_rid
+        return results
+
+    # --------------------------------------------------------------- lockstep
+    def generate_batch_lockstep(self, prompts: Sequence[Sequence[int]],
+                                max_new_tokens: MaxNew) -> List[RequestResult]:
+        """Legacy loop: all requests step together; finished requests idle in
+        their slot until the slowest request of the batch drains."""
         cfg, fns = self.config, self.fns
         B = len(prompts)
-        T = fns.slots
-        req_ids = [self._next_request_id + i for i in range(B)]
+        W = self.tree_width
+        budgets = _budgets(max_new_tokens, B)
+        states = [RequestState(rid=self._next_request_id + i,
+                               prompt=list(prompts[i]),
+                               max_new_tokens=budgets[i], eos_id=self.eos_id)
+                  for i in range(B)]
         self._next_request_id += B
 
-        # --- trie: prompt-branch inserting (per request id, eliminable)
-        if cfg.insert_prompt:
-            for rid, p in zip(req_ids, prompts):
-                self.trie.insert_ngrams(p, cfg.branch_length, request_id=rid)
+        for rs in states:
+            trie_admit(self.trie, cfg, rs.rid, rs.prompt)
 
-        # --- prefill (pad to common length)
-        S = max(len(p) for p in prompts)
+        # --- prefill (pad to a common fixed length when configured)
+        S = fns.prefill_len or max(len(p) for p in prompts)
         toks = np.full((B, S), fns.pad_id, dtype=np.int32)
         lens = np.zeros((B,), dtype=np.int32)
         for b, p in enumerate(prompts):
+            assert len(p) <= S, (len(p), S)
             toks[b, :len(p)] = np.asarray(p, dtype=np.int32)
             lens[b] = len(p)
         cache, chosen_root = fns.prefill(toks, lens)
         chosen_root = np.asarray(chosen_root)
         cache_lens = lens.copy()
+        for b, rs in enumerate(states):
+            rs.start(int(chosen_root[b]))
+            # a first tree step would scatter past the cache end: stop at
+            # the prefill token rather than commit garbage
+            if cache_lens[b] + W > fns.max_seq_len:
+                rs.done = True
 
-        outputs: List[List[int]] = [[int(chosen_root[b])] for b in range(B)]
-        stats = [GenStats(steps=1, tokens=1) for _ in range(B)]
-        done = np.array([outputs[b][0] == self.eos_id
-                         or max_new_tokens <= 1 for b in range(B)])
-        # context fed to retrieval = prompt ⧺ generated
-        contexts = [list(prompts[b]) + outputs[b] for b in range(B)]
-        # tokens already inserted into the trie from the output stream
-        inserted_upto = [0 for _ in range(B)]
-
-        while (~done).any():
-            trees: List[DraftTree] = []
-            for b in range(B):
-                trees.append(self._build_tree(contexts[b]))
-            tok = np.stack([t.tokens for t in trees])                 # (B,T)
+        while any(not rs.done for rs in states):
+            trees = [build_draft_tree(self.trie, cfg, rs.context,
+                                      fns.pad_id, W)
+                     if not rs.done else idle_tree(W, fns.pad_id)
+                     for rs in states]
+            tok = np.stack([t.tokens for t in trees])                 # (B,W)
             pos = (cache_lens[:, None]
                    + np.stack([t.depth for t in trees])).astype(np.int32)
-            mask = np.stack([t.tree_mask for t in trees])             # (B,T,T)
+            mask = np.stack([t.tree_mask for t in trees])             # (B,W,W)
             cache, chosen = fns.tree_step(cache, cache_lens, tok, pos, mask)
             chosen = np.asarray(chosen)
 
             accepted, kv_slots = verify_accept_batch(trees, chosen)
-            gather = np.zeros((B, T), dtype=np.int32)
+            gather = np.zeros((B, W), dtype=np.int32)
             n_acc = np.zeros((B,), dtype=np.int32)
-            for b in range(B):
-                if done[b]:
-                    n_acc[b] = 0
-                    continue
-                # truncate at EOS / budget
-                budget = max_new_tokens - len(outputs[b])
-                acc = accepted[b][:budget]
-                if self.eos_id in acc:
-                    acc = acc[:acc.index(self.eos_id) + 1]
-                ks = kv_slots[b][:len(acc)]
+            stepped = [b for b in range(B) if not states[b].done]
+            for b in stepped:
+                ks = states[b].accept(accepted[b], kv_slots[b],
+                                      trees[b].n_slots)
                 gather[b, :len(ks)] = np.asarray(ks, dtype=np.int32)
                 n_acc[b] = len(ks)
-                outputs[b].extend(acc)
-                contexts[b].extend(acc)
-                stats[b].steps += 1
-                stats[b].tokens += len(acc)
-                stats[b].dropped_slots += trees[b].n_slots - len(ks)
-                if acc and acc[-1] == self.eos_id:
-                    done[b] = True
-                if len(outputs[b]) >= max_new_tokens:
-                    done[b] = True
             cache, cache_lens = fns.commit(cache, cache_lens, gather, n_acc)
             cache_lens = np.asarray(cache_lens)
 
-            # --- trie: generated-branch inserting on-the-fly
-            if cfg.insert_output:
-                for b in range(B):
-                    out = outputs[b]
-                    lo = max(inserted_upto[b] - cfg.branch_length, 0)
-                    if len(out) - lo >= 2:
-                        self.trie.insert_ngrams(out[lo:], cfg.branch_length)
-                        inserted_upto[b] = len(out)
-            # safety: cache overflow → stop
-            for b in range(B):
-                if cache_lens[b] + T >= fns.max_seq_len:
-                    done[b] = True
+            for b in stepped:
+                trie_stream(self.trie, cfg, states[b])
+                # safety: cache overflow → stop
+                if cache_lens[b] + W >= fns.max_seq_len:
+                    states[b].done = True
 
-        # --- trie: branch eliminating for finished requests
-        if cfg.eliminate:
-            for rid in req_ids:
-                self.trie.eliminate(rid)
+        for rs in states:
+            trie_retire(self.trie, cfg, rs.rid, prune=False)
         if cfg.prune and len(self.trie) > self.trie.capacity:
             self.trie.prune()
 
-        return [RequestResult(tokens=outputs[b], stats=stats[b])
-                for b in range(B)]
+        return [rs.result() for rs in states]
 
 
 def reference_decode(fns: StepFns, prompt: Sequence[int], max_new_tokens: int,
                      eos_id: int = -1, pad_id: int = 0) -> List[int]:
     """Plain step-by-step decoding through the *same* device functions
-    (T-wide step with an empty draft).  Ground truth for lossless tests."""
+    (width-1 step with an empty draft).  Ground truth for lossless tests."""
     cfg = LookaheadConfig(strategy="none", decoding_length=0)
     engine = LookaheadEngine(fns, cfg, eos_id=eos_id)
     return engine.generate(prompt, max_new_tokens).tokens
 
 
 __all__ = ["LookaheadEngine", "StepFns", "GenStats", "RequestResult",
-           "reference_decode"]
+           "RequestState", "reference_decode"]

@@ -1,0 +1,207 @@
+"""Per-request serving primitives shared by the lock-step loop and the
+continuous-batching scheduler.
+
+The lookahead step decomposes into host-side pieces that are *per request*
+(draft build, verify/accept bookkeeping, trie updates) and device pieces
+that are *per batch* (``StepFns``).  ``RequestState`` owns the former so a
+request can live in any slot of any serving loop: the lock-step
+``LookaheadEngine.generate_batch_lockstep`` and the slot-based
+``repro.serving.scheduler.ContinuousScheduler`` drive the exact same state
+transitions, which is what makes per-request losslessness independent of
+batch composition (see DESIGN.md §Scheduler).
+
+Lifecycle::
+
+    submitted --admit--> prefilled (start) --accept*--> done (retire)
+
+``start`` consumes the prefill's chosen root token; every subsequent
+``accept`` consumes the verified tokens of one tree step and returns the KV
+slot indices to commit (truncated at the request's budget / EOS).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .draft import BUILDERS, DraftTree, _finalize, repad
+from .strategies import LookaheadConfig
+from .trie import TrieTree
+
+
+@dataclass
+class StepFns:
+    """Device functions the serving loops drive (all jit-compiled, fixed
+    shapes — one compile per engine; see DESIGN.md §Compile-once shapes).
+
+    prefill(tokens(B,S) i32, lens(B,) i32) -> (cache, chosen_root(B,) i32)
+    tree_step(cache, cache_lens(B,), tokens(B,T), pos(B,T), mask(B,T,T))
+        -> (cache, chosen(B,T) i32)
+    commit(cache, cache_lens(B,), gather_idx(B,T), n_accept(B,))
+        -> (cache, new_lens(B,))
+
+    Slot-serving extensions (optional; required by ContinuousScheduler):
+
+    init_cache(lanes) -> cache                      — allocate a B-lane cache
+    prefill_into_slot(cache, lane, tokens(1,S), lens(1,))
+        -> (cache, chosen_root(1,))                 — admit one request
+    reset_slot(cache, lane) -> cache                — zero a freed lane
+    prefill_len: fixed prompt pad length (compile prefill once); None keeps
+        the legacy pad-to-batch-max behaviour.
+    """
+    prefill: Callable
+    tree_step: Callable
+    commit: Callable
+    slots: int            # T = 1 + decoding_length
+    max_seq_len: int
+    pad_id: int = 0
+    init_cache: Optional[Callable] = None
+    prefill_into_slot: Optional[Callable] = None
+    reset_slot: Optional[Callable] = None
+    prefill_len: Optional[int] = None
+
+    @property
+    def supports_slot_serving(self) -> bool:
+        return (self.prefill_into_slot is not None
+                and self.init_cache is not None)
+
+
+@dataclass
+class GenStats:
+    steps: int = 0
+    tokens: int = 0
+    dropped_slots: int = 0    # draft tokens computed but rejected
+
+    @property
+    def edl(self) -> float:
+        """Mean accepted tokens per step (paper: effective decoding length)."""
+        return self.tokens / max(self.steps, 1)
+
+
+@dataclass
+class RequestResult:
+    tokens: List[int]
+    stats: GenStats
+    rid: int = -1
+    latency_s: float = 0.0    # submit -> finish (scheduler runs only)
+    ttft_s: float = 0.0       # submit -> first token (scheduler runs only)
+    queue_s: float = 0.0      # submit -> admission (scheduler runs only)
+
+
+@dataclass
+class RequestState:
+    """Host-side state of one in-flight request (slot-agnostic)."""
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: int = -1
+    output: List[int] = field(default_factory=list)
+    context: List[int] = field(default_factory=list)   # prompt ⧺ output
+    stats: GenStats = field(default_factory=GenStats)
+    done: bool = False
+    inserted_upto: int = 0    # output tokens already streamed into the trie
+    lane: int = -1            # scheduler slot currently occupied (-1 = none)
+    submit_t: float = 0.0
+    admit_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+
+    def start(self, first_token: int) -> None:
+        """Consume the prefill's chosen root (the first output token)."""
+        first_token = int(first_token)
+        self.output = [first_token]
+        self.context = list(self.prompt) + [first_token]
+        self.stats.steps += 1
+        self.stats.tokens += 1
+        if first_token == self.eos_id or self.max_new_tokens <= 1:
+            self.done = True
+
+    def accept(self, accepted: Sequence[int], kv_slots: Sequence[int],
+               n_tree_slots: int) -> List[int]:
+        """Absorb one verified step; returns the KV slots to commit.
+
+        Truncates at the remaining token budget, then at EOS, exactly like
+        step-by-step decoding would — the committed prefix therefore never
+        depends on how many draft tokens happened to verify.
+        """
+        budget = self.max_new_tokens - len(self.output)
+        acc = list(accepted[:budget])
+        if self.eos_id in acc:
+            acc = acc[:acc.index(self.eos_id) + 1]
+        ks = list(kv_slots[:len(acc)])
+        self.output.extend(acc)
+        self.context.extend(acc)
+        self.stats.steps += 1
+        self.stats.tokens += len(acc)
+        self.stats.dropped_slots += n_tree_slots - len(ks)
+        if acc and acc[-1] == self.eos_id:
+            self.done = True
+        if len(self.output) >= self.max_new_tokens:
+            self.done = True
+        return ks
+
+    def result(self) -> RequestResult:
+        return RequestResult(
+            tokens=self.output, stats=self.stats, rid=self.rid,
+            latency_s=max(self.finish_t - self.submit_t, 0.0),
+            ttft_s=max(self.first_token_t - self.submit_t, 0.0),
+            queue_s=max(self.admit_t - self.submit_t, 0.0))
+
+
+# ------------------------------------------------------------------- drafting
+def build_draft_tree(trie: TrieTree, cfg: LookaheadConfig,
+                     context: Sequence[int], pad_id: int,
+                     width: int) -> DraftTree:
+    """Retrieve + build a draft tree padded to exactly ``width`` slots."""
+    root = int(context[-1])
+    if cfg.strategy == "none" or cfg.decoding_length == 0 or width <= 1:
+        return _finalize([root], [-1], max(width, 1), pad_id)
+    branches, scores = trie.retrieve(
+        context, decoding_length=cfg.decoding_length,
+        max_prefix_len=cfg.max_prefix_len,
+        min_matched_tokens=cfg.min_matched_tokens)
+    tree = BUILDERS[cfg.strategy](root, branches, scores,
+                                  cfg.decoding_length, pad_id)
+    return repad(tree, width, pad_id)
+
+
+@functools.lru_cache(maxsize=16)
+def idle_tree(width: int, pad_id: int) -> DraftTree:
+    """Placeholder tree for an empty slot (masked out: n_accept == 0)."""
+    return _finalize([pad_id], [-1], max(width, 1), pad_id)
+
+
+# ------------------------------------------------------------ trie bookkeeping
+def trie_admit(trie: TrieTree, cfg: LookaheadConfig, rid: int,
+               prompt: Sequence[int]) -> None:
+    """Prompt-branch inserting at admission (per request id, eliminable)."""
+    if cfg.insert_prompt:
+        trie.insert_ngrams(prompt, cfg.branch_length, request_id=rid)
+
+
+def trie_stream(trie: TrieTree, cfg: LookaheadConfig,
+                state: RequestState) -> None:
+    """Generated-branch inserting on-the-fly (paper Algorithm 1 lines 5-9)."""
+    if not cfg.insert_output:
+        return
+    out = state.output
+    lo = max(state.inserted_upto - cfg.branch_length, 0)
+    if len(out) - lo >= 2:
+        trie.insert_ngrams(out[lo:], cfg.branch_length)
+        state.inserted_upto = len(out)
+
+
+def trie_retire(trie: TrieTree, cfg: LookaheadConfig, rid: int, *,
+                prune: bool = True) -> None:
+    """Branch eliminating for a finished request (+ capacity pruning)."""
+    if cfg.eliminate:
+        trie.eliminate(rid)
+    if prune and cfg.prune and len(trie) > trie.capacity:
+        trie.prune()
+
+
+__all__ = ["StepFns", "GenStats", "RequestResult", "RequestState",
+           "build_draft_tree", "idle_tree", "trie_admit", "trie_stream",
+           "trie_retire"]

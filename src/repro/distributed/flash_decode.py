@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.distributed.sharding import axis_size
 from repro.models.layers import NEG_INF
 
 
@@ -105,7 +106,7 @@ def _local_attend(q, k_new, v_new, k_c, v_c, cache_lens, tree_mask, *,
     # global offset of this shard's KV rows
     idx = jnp.zeros((), jnp.int32)
     for a in seq_axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     offset = idx * Sl
 
     # scatter the new draft KV rows that land in this shard.  NB: negative

@@ -1,7 +1,13 @@
-"""Serving launcher: run a LookaheadEngine over an arch config.
+"""Serving launcher: drive the continuous-batching scheduler (or the legacy
+lock-step loop) over an arch config with a synthetic arrival stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-        --smoke --requests 8
+        --smoke --requests 16 --lanes 4 --rate 8
+
+Reports throughput (tokens/s), EDL, lane occupancy and per-request latency
+percentiles (p50/p95/p99) plus time-to-first-token.  ``--rate 0`` submits
+every request at t=0 (closed-loop batch mode); a positive rate draws Poisson
+inter-arrival gaps (open-loop mode — the scheduler admits mid-flight).
 
 On real hardware drop --smoke to load the full config (weights from
 --ckpt-dir via training.checkpoint) onto the production mesh.
@@ -10,17 +16,22 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import List
 
 import jax
 import numpy as np
 
 from repro import configs as cfgreg
 from repro.core import LookaheadConfig, LookaheadEngine
-from repro.distributed.sharding import DEFAULT_RULES, sharding_ctx
 from repro.models import transformer as tx
+from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.session import make_session_fns
 from repro.training.checkpoint import CheckpointManager
 from repro.training.data import PROFILES, SyntheticCorpus
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 def main() -> None:
@@ -29,8 +40,18 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="KV-cache slots held on device (continuous mode)")
+    ap.add_argument("--mode", choices=["continuous", "lockstep"],
+                    default="continuous")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="mean arrivals/s (Poisson); 0 = all at t0")
     ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-length workload: alternate max_new/4 and "
+                         "max_new budgets (the continuous-batching case)")
+    ap.add_argument("--prefill-len", type=int, default=128,
+                    help="fixed prompt pad length (compile prefill once)")
     ap.add_argument("--decoding-length", type=int, default=32)
     ap.add_argument("--branch-length", type=int, default=12)
     ap.add_argument("--ckpt-dir", default=None)
@@ -58,20 +79,69 @@ def main() -> None:
                          sample=args.sample, temperature=args.temperature)
     fns = make_session_fns(cfg, params, sample=args.sample,
                            temperature=args.temperature,
-                           base_key=jax.random.key(0), slots=la.slots)
-    engine = LookaheadEngine(fns, la)
+                           base_key=jax.random.key(0), slots=la.slots,
+                           prefill_len=args.prefill_len)
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
-    reqs = [corpus.sample()[0][:96] for _ in range(args.requests)]
+    prompt_cap = min(96, args.prefill_len)
+    reqs = [corpus.sample()[0][:prompt_cap] for _ in range(args.requests)]
+    budgets = [args.max_new if (not args.mixed or i % 2) else
+               max(args.max_new // 4, 2) for i in range(args.requests)]
+
+    if args.mode == "lockstep":
+        engine = LookaheadEngine(fns, la)
+        t0 = time.time()
+        tok = steps = 0
+        for i in range(0, len(reqs), args.lanes):
+            outs = engine.generate_batch_lockstep(
+                reqs[i:i + args.lanes], budgets[i:i + args.lanes])
+            for o in outs:
+                tok += len(o.tokens)
+                steps += o.stats.steps
+        dt = time.time() - t0
+        print(f"lockstep: {tok} tokens / {steps} steps "
+              f"(EDL {tok/max(steps,1):.2f}) in {dt:.1f}s "
+              f"-> {tok/dt:.1f} tok/s; trie={len(engine.trie)} nodes")
+        return
+
+    # ---------------------------------------------------- continuous serving
+    sched = ContinuousScheduler(fns, la, lanes=args.lanes,
+                                prefill_len=args.prefill_len)
+    rng = np.random.RandomState(0)
+    if args.rate > 0:
+        gaps = rng.exponential(1.0 / args.rate, size=len(reqs))
+        arrivals = np.cumsum(gaps)
+    else:
+        arrivals = np.zeros(len(reqs))
+
     t0 = time.time()
-    tok = steps = 0
-    for i in range(0, len(reqs), args.batch):
-        outs = engine.generate_batch(reqs[i:i + args.batch], args.max_new)
-        for o in outs:
-            tok += len(o.tokens)
-            steps += o.stats.steps
+    nxt = 0
+    results = []
+    while nxt < len(reqs) or not sched.idle:
+        now = time.time() - t0
+        while nxt < len(reqs) and arrivals[nxt] <= now:
+            sched.submit(reqs[nxt], budgets[nxt])
+            nxt += 1
+        if sched.idle:
+            # open-loop gap: nothing in flight, wait for the next arrival
+            time.sleep(min(max(arrivals[nxt] - now, 0.0), 0.05))
+            continue
+        results.extend(sched.step())
     dt = time.time() - t0
-    print(f"{tok} tokens / {steps} steps (EDL {tok/max(steps,1):.2f}) "
-          f"in {dt:.1f}s -> {tok/dt:.1f} tok/s; trie={len(engine.trie)} nodes")
+
+    tok = sum(len(r.tokens) for r in results)
+    steps = sum(r.stats.steps for r in results)
+    lat = [r.latency_s for r in results]
+    ttft = [r.ttft_s for r in results]
+    st = sched.stats
+    print(f"continuous: {tok} tokens / {len(results)} requests "
+          f"({st.decode_steps} device steps, EDL {tok/max(steps,1):.2f}, "
+          f"occupancy {st.occupancy:.2f}) in {dt:.1f}s -> {tok/dt:.1f} tok/s")
+    print(f"latency  p50 {_pct(lat, 50)*1e3:7.1f} ms   "
+          f"p95 {_pct(lat, 95)*1e3:7.1f} ms   "
+          f"p99 {_pct(lat, 99)*1e3:7.1f} ms")
+    print(f"ttft     p50 {_pct(ttft, 50)*1e3:7.1f} ms   "
+          f"p95 {_pct(ttft, 95)*1e3:7.1f} ms   "
+          f"p99 {_pct(ttft, 99)*1e3:7.1f} ms; trie={len(sched.trie)} nodes")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.distributed.sharding import axis_size
+
 
 def router_topk(x: jax.Array, w_router: jax.Array, top_k: int
                 ) -> Tuple[jax.Array, jax.Array]:
@@ -100,7 +102,7 @@ def moe_local(x: jax.Array, w_router: jax.Array, w_gate: jax.Array,
     """
     n, D = x.shape
     if ep_axis is not None:
-        ep = jax.lax.axis_size(ep_axis)
+        ep = axis_size(ep_axis)
         E = w_gate.shape[0] * ep      # global expert count
     else:
         ep = 1

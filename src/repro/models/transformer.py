@@ -457,6 +457,54 @@ def prefill(cfg: TransformerConfig, params: Params, tokens: jax.Array,
     return cache, _unembed(cfg, params, h_last)
 
 
+def prefill_into_slot(cfg: TransformerConfig, params: Params,
+                      cache: Dict[str, jax.Array], slot: jax.Array,
+                      tokens: jax.Array, lens: jax.Array
+                      ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Prefill ONE request into batch lane ``slot`` of an existing cache.
+
+    tokens (1, S) padded prompt; lens (1,).  Writes KV for positions [0, S)
+    of that lane only (other lanes untouched — mid-flight admission in the
+    continuous-batching scheduler).  ``slot`` may be a traced scalar, so one
+    compilation serves every lane.  Returns (cache, last_logits (1, V)).
+    """
+    B, S = tokens.shape
+    assert B == 1, "prefill_into_slot admits one request at a time"
+    h = _embed(cfg, params, tokens)
+    h = constrain(h, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    len_mask = positions < lens[:, None]
+    h, kv = _scan_layers(cfg, params, h, _layer_self, extra_xs=(),
+                         extra_args=(positions, len_mask))
+    k_new, v_new = kv     # (L, 1, S, K, dh)
+    slot = jnp.asarray(slot, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    start = (zero, slot, zero, zero, zero)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), start),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), start)}
+    h_last = jnp.take_along_axis(
+        h, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return cache, _unembed(cfg, params, h_last)
+
+
+def reset_slot(cache: Dict[str, jax.Array], slot: jax.Array
+               ) -> Dict[str, jax.Array]:
+    """Zero one batch lane of the KV cache.  Hygiene only: correctness never
+    depends on it (rows ≥ cache_len are masked out of every attention)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    start = (zero, slot, zero, zero, zero)
+    out = {}
+    for name, buf in cache.items():
+        lane = jax.lax.dynamic_slice_in_dim(buf, 0, 1, axis=1)
+        out[name] = jax.lax.dynamic_update_slice(
+            buf, jnp.zeros_like(lane), start)
+    return out
+
+
 def tree_step(cfg: TransformerConfig, params: Params,
               cache: Dict[str, jax.Array], cache_lens: jax.Array,
               tokens: jax.Array, positions: jax.Array, tree_mask: jax.Array
@@ -523,4 +571,5 @@ def commit_cache(cache: Dict[str, jax.Array], cache_lens: jax.Array,
 
 __all__ = ["TransformerConfig", "Params", "init_params", "param_logical_axes",
            "train_logits", "lm_loss", "init_cache", "cache_logical_axes",
-           "prefill", "tree_step", "commit_cache"]
+           "prefill", "prefill_into_slot", "reset_slot", "tree_step",
+           "commit_cache"]

@@ -1,4 +1,6 @@
 from .session import make_session_fns
 from .sampler import choose_tokens
+from .scheduler import ContinuousScheduler, SchedulerStats
 
-__all__ = ["make_session_fns", "choose_tokens"]
+__all__ = ["make_session_fns", "choose_tokens", "ContinuousScheduler",
+           "SchedulerStats"]

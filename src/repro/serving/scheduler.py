@@ -1,0 +1,292 @@
+"""Slot-based continuous-batching scheduler (the production serving loop).
+
+The paper's deployment setting ("serve heavy traffic" — Alipay production
+since April 2023) needs the device batch to stay full: lock-step batching
+leaves lanes idle as soon as the shortest request of a batch finishes, and
+with mixed ``max_new_tokens`` most device steps run mostly-empty.  The
+scheduler instead owns a fixed pool of ``lanes`` KV-cache slots plus an
+admission queue:
+
+  * a submitted request waits in the queue until a lane frees up,
+  * the first admission batch-prefills one cohort (``StepFns.prefill`` at
+    (lanes, prefill_len) — the dense-FLOPs phase keeps its batching);
+    afterwards admission prefills the prompt *into* the freed lane only
+    (``StepFns.prefill_into_slot`` — one (1, prefill_len) forward; every
+    other lane keeps decoding, its cache untouched),
+  * each decode step drives ALL lanes through one fixed-shape
+    ``tree_step``/``commit`` pair; idle lanes carry a placeholder draft and
+    commit zero tokens (masked out, never stalling anyone),
+  * a request leaves its lane on EOS / budget / cache-overflow and the next
+    queued request is admitted on the following scheduler iteration.  Stale
+    KV rows of a freed lane are left in place — they are never attended
+    (invariant I3); ``StepFns.reset_slot`` exists to scrub them for
+    debugging/inspection, not for correctness.
+
+Slot lifecycle (DESIGN.md §Scheduler slot lifecycle):
+
+    FREE --admit(prefill_into_slot)--> ACTIVE --accept*--> DRAINED --release--> FREE
+
+Invariants the implementation maintains (and tests assert):
+
+  I1  Losslessness is per-request: a request's tokens equal
+      ``reference_decode`` output regardless of arrival order, lane
+      assignment, or what else is co-batched (greedy and position-keyed
+      sample mode alike — sampling keys fold the request's own absolute
+      output position, never the lane or step index).
+  I2  Fixed shapes: every device call after construction uses the same
+      (lanes, T) / (1, prefill_len) shapes ⇒ each StepFns member compiles
+      exactly once per scheduler.
+  I3  A lane's committed cache prefix [0, lens[lane]) is always exactly the
+      KV of its request's prompt ⧺ accepted tokens; rows beyond it are
+      garbage and never attended.
+  I4  Trie bookkeeping is slot-agnostic: prompt branches are inserted at
+      admission and eliminated at retirement, output branches stream in as
+      tokens are accepted — identical transitions to the lock-step loop.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import (RequestResult, RequestState, StepFns,
+                                build_draft_tree, idle_tree, trie_admit,
+                                trie_retire, trie_stream)
+from repro.core.strategies import LookaheadConfig
+from repro.core.trie import TrieTree
+from repro.core.verify import verify_accept_batch
+
+
+class SchedulerStats:
+    """Aggregate serving-loop statistics (occupancy is the continuous-
+    batching win: mean fraction of lanes doing useful work per step)."""
+
+    def __init__(self, lanes: int):
+        self.lanes = lanes
+        self.decode_steps = 0
+        self.active_lane_steps = 0
+        self.admitted = 0
+        self.finished = 0
+
+    @property
+    def occupancy(self) -> float:
+        return self.active_lane_steps / max(self.decode_steps * self.lanes, 1)
+
+
+class ContinuousScheduler:
+    """Fixed-lane continuous-batching serving loop over ``StepFns``.
+
+    Drive it either as a batch runner (``submit`` everything, then ``run()``)
+    or as an online loop (``submit`` as requests arrive, call ``step()``
+    repeatedly; each call returns the requests that finished in it).
+    """
+
+    def __init__(self, fns: StepFns, config: LookaheadConfig, *,
+                 lanes: int, trie: Optional[TrieTree] = None,
+                 eos_id: int = -1, prefill_len: Optional[int] = None,
+                 rid_start: int = 0):
+        if not fns.supports_slot_serving:
+            raise ValueError("StepFns lack prefill_into_slot/init_cache; "
+                             "continuous batching needs per-slot admission")
+        self.fns = fns
+        self.config = config
+        self.eos_id = eos_id
+        self.lanes = int(lanes)
+        self.prefill_len = int(prefill_len or fns.prefill_len or 0)
+        if self.prefill_len <= 0:
+            raise ValueError("prefill_len must be set (fixed prompt pad "
+                             "length; compile-once admission)")
+        self.trie = trie if trie is not None else TrieTree(
+            capacity=config.trie_capacity, prompt_boost=config.prompt_boost,
+            decay=config.decay)
+        if config.strategy == "none" or config.decoding_length == 0:
+            self.width = 1
+        else:
+            self.width = fns.slots
+        if self.prefill_len + self.width > fns.max_seq_len:
+            # the first tree step after admitting a full-length prompt would
+            # scatter draft KV past the cache end (silently dropped rows ⇒
+            # garbage logits ⇒ a losslessness violation, not an error)
+            raise ValueError(
+                f"prefill_len={self.prefill_len} + tree width={self.width} "
+                f"exceeds max_seq_len={fns.max_seq_len}")
+        self.cache = None          # allocated by the first admission batch
+        self.lens = np.zeros((self.lanes,), dtype=np.int32)
+        self.states: List[Optional[RequestState]] = [None] * self.lanes
+        self.queue: Deque[RequestState] = deque()
+        self.results: Dict[int, RequestResult] = {}
+        self._order: List[int] = []
+        self.next_rid = int(rid_start)
+        self.stats = SchedulerStats(self.lanes)
+
+    # ------------------------------------------------------------------ state
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.states if s is not None)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.queue)
+
+    @property
+    def idle(self) -> bool:
+        return self.n_active == 0 and not self.queue
+
+    # ----------------------------------------------------------------- submit
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
+        """Queue a request; returns its request id."""
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.prefill_len:
+            raise ValueError(f"prompt length {len(prompt)} exceeds "
+                             f"prefill_len={self.prefill_len}")
+        rid = self.next_rid
+        self.next_rid += 1
+        rs = RequestState(rid=rid, prompt=prompt,
+                          max_new_tokens=int(max_new_tokens),
+                          eos_id=self.eos_id)
+        rs.submit_t = time.perf_counter()
+        self.queue.append(rs)
+        self._order.append(rid)
+        return rid
+
+    # ------------------------------------------------------------------- loop
+    def step(self) -> List[RequestResult]:
+        """One scheduler iteration: admit into free lanes, then one masked
+        decode step across all lanes.  Returns requests finished this call."""
+        finished = self._admit()
+        finished.extend(self._decode())
+        return finished
+
+    def run(self) -> List[RequestResult]:
+        """Drain queue + lanes; results in submission order."""
+        while not self.idle:
+            self.step()
+        return [self.results[rid] for rid in self._order
+                if rid in self.results]
+
+    # -------------------------------------------------------------- admission
+    def _admit(self) -> List[RequestResult]:
+        if self.cache is None and self.queue:
+            return self._admit_initial_cohort()
+        finished: List[RequestResult] = []
+        fns = self.fns
+        for lane in range(self.lanes):
+            while self.states[lane] is None and self.queue:
+                rs = self.queue.popleft()
+                rs.lane = lane
+                rs.admit_t = time.perf_counter()
+                trie_admit(self.trie, self.config, rs.rid, rs.prompt)
+                toks = np.full((1, self.prefill_len), fns.pad_id,
+                               dtype=np.int32)
+                toks[0, :len(rs.prompt)] = np.asarray(rs.prompt,
+                                                      dtype=np.int32)
+                plen = np.asarray([len(rs.prompt)], dtype=np.int32)
+                self.cache, chosen = fns.prefill_into_slot(
+                    self.cache, lane, toks, plen)
+                if not self._settle(rs, int(np.asarray(chosen)[0]), lane):
+                    finished.append(self._finish(rs))
+        return finished
+
+    def _admit_initial_cohort(self) -> List[RequestResult]:
+        """First admission: one batched (lanes, prefill_len) prefill builds
+        the cache and fills as many lanes as the queue covers — the
+        FLOPs-dense phase keeps its batching; per-slot prefill only pays for
+        mid-flight admissions."""
+        fns = self.fns
+        cohort = [self.queue.popleft()
+                  for _ in range(min(self.lanes, len(self.queue)))]
+        toks = np.full((self.lanes, self.prefill_len), fns.pad_id,
+                       dtype=np.int32)
+        lens = np.ones((self.lanes,), dtype=np.int32)   # dummy rows: 1 pad
+        now = time.perf_counter()
+        for lane, rs in enumerate(cohort):
+            rs.lane = lane
+            rs.admit_t = now
+            trie_admit(self.trie, self.config, rs.rid, rs.prompt)
+            toks[lane, :len(rs.prompt)] = np.asarray(rs.prompt,
+                                                     dtype=np.int32)
+            lens[lane] = len(rs.prompt)
+        self.cache, chosen = fns.prefill(toks, lens)
+        chosen = np.asarray(chosen)
+        finished: List[RequestResult] = []
+        for lane, rs in enumerate(cohort):
+            if not self._settle(rs, int(chosen[lane]), lane):
+                finished.append(self._finish(rs))
+        return finished
+
+    def _settle(self, rs: RequestState, first_token: int, lane: int) -> bool:
+        """Common post-prefill bookkeeping; returns False if the request
+        already finished at prefill (budget 1 / instant EOS) — its lane
+        stays free for the next scheduler iteration."""
+        rs.start(first_token)
+        rs.first_token_t = time.perf_counter()
+        self.stats.admitted += 1
+        if rs.done:
+            trie_stream(self.trie, self.config, rs)
+            return False
+        self.states[lane] = rs
+        self.lens[lane] = len(rs.prompt)
+        return True
+
+    # ----------------------------------------------------------------- decode
+    def _decode(self) -> List[RequestResult]:
+        active = [l for l in range(self.lanes) if self.states[l] is not None]
+        if not active:
+            return []
+        cfg, fns, W = self.config, self.fns, self.width
+        trees = [build_draft_tree(self.trie, cfg, self.states[l].context,
+                                  fns.pad_id, W)
+                 if self.states[l] is not None else idle_tree(W, fns.pad_id)
+                 for l in range(self.lanes)]
+        tok = np.stack([t.tokens for t in trees])                     # (B,W)
+        pos = (self.lens[:, None]
+               + np.stack([t.depth for t in trees])).astype(np.int32)
+        mask = np.stack([t.tree_mask for t in trees])                 # (B,W,W)
+        self.cache, chosen = fns.tree_step(self.cache, self.lens, tok, pos,
+                                           mask)
+        chosen = np.asarray(chosen)
+
+        accepted, kv_slots = verify_accept_batch(trees, chosen)
+        gather = np.zeros((self.lanes, W), dtype=np.int32)
+        n_acc = np.zeros((self.lanes,), dtype=np.int32)
+        for l in active:
+            ks = self.states[l].accept(accepted[l], kv_slots[l],
+                                       trees[l].n_slots)
+            gather[l, :len(ks)] = np.asarray(ks, dtype=np.int32)
+            n_acc[l] = len(ks)
+        self.cache, new_lens = fns.commit(self.cache, self.lens, gather,
+                                          n_acc)
+        self.lens = np.asarray(new_lens, dtype=np.int32).copy()
+        self.stats.decode_steps += 1
+        self.stats.active_lane_steps += len(active)
+
+        finished: List[RequestResult] = []
+        for l in active:
+            rs = self.states[l]
+            trie_stream(self.trie, cfg, rs)
+            # safety: cache overflow → stop before the next step could
+            # scatter past max_seq_len
+            if self.lens[l] + W >= fns.max_seq_len:
+                rs.done = True
+            if rs.done:
+                finished.append(self._finish(rs))
+                self.states[l] = None
+                self.lens[l] = 0
+        return finished
+
+    # ----------------------------------------------------------------- retire
+    def _finish(self, rs: RequestState) -> RequestResult:
+        rs.finish_t = time.perf_counter()
+        rs.lane = -1
+        trie_retire(self.trie, self.config, rs.rid)
+        res = rs.result()
+        self.results[rs.rid] = res
+        self.stats.finished += 1
+        return res
+
+
+__all__ = ["ContinuousScheduler", "SchedulerStats"]

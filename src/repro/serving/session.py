@@ -1,13 +1,25 @@
-"""Build the jitted StepFns driving a LookaheadEngine for a transformer LM."""
+"""Build the jitted StepFns driving a LookaheadEngine for a transformer LM.
+
+Compile-once contract (DESIGN.md §Compile-once shapes): for one session every
+device function is traced for exactly one shape —
+
+  * ``tree_step`` / ``commit`` at the engine's tree width T and lane count B,
+  * ``prefill`` at ``(B, prefill_len)`` for the initial admission cohort,
+  * ``prefill_into_slot`` at ``(1, prefill_len)`` (lane index is a traced
+    scalar, so admission into any slot reuses the same executable).
+
+Without ``prefill_len`` the legacy pad-to-batch-max behaviour retraces per
+distinct prompt length.
+"""
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import StepFns
+from repro.core.request import StepFns
 from repro.models import transformer as tx
 from repro.serving.sampler import choose_tokens
 
@@ -15,26 +27,48 @@ from repro.serving.sampler import choose_tokens
 def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                      sample: bool = False, temperature: float = 1.0,
                      base_key: Optional[jax.Array] = None,
-                     slots: int = 1, pad_id: int = 0) -> StepFns:
-    """Jitted prefill / tree_step / commit closures over ``params``.
+                     slots: int = 1, pad_id: int = 0,
+                     prefill_len: Optional[int] = None,
+                     logits_transform: Optional[Callable] = None) -> StepFns:
+    """Jitted prefill / prefill_into_slot / tree_step / commit closures over
+    ``params``.
 
-    ``slots`` is informational (engine uses tree sizes dynamically; jit
-    retraces per distinct T, which is 1 or 2 shapes in practice).
+    ``slots`` is the tree width T = 1 + decoding_length the serving loop pads
+    every draft to.  ``prefill_len`` fixes the prompt pad length so prefill
+    paths compile once; prompts longer than it are rejected at submit time.
+    ``logits_transform(logits, tokens, positions)`` optionally rewrites the
+    step logits before token choice (the benchmarks' guided model) — it must
+    stay a pure function of (token, position) to preserve losslessness.
     """
     choose = functools.partial(choose_tokens, sample=sample,
                                temperature=temperature, base_key=base_key)
+
+    def _choose_last(tokens, lens, last_logits):
+        lg = last_logits[:, None, :]
+        if logits_transform is not None:
+            last_tok = jnp.take_along_axis(tokens, (lens - 1)[:, None],
+                                           axis=1)
+            lg = logits_transform(lg, last_tok, (lens - 1)[:, None])
+        return choose(lg, lens[:, None])[:, 0]
 
     @jax.jit
     def _prefill(tokens, lens):
         cache = tx.init_cache(cfg, tokens.shape[0])
         cache, last_logits = tx.prefill(cfg, params, tokens, lens, cache)
-        chosen = choose(last_logits[:, None, :], lens[:, None])[:, 0]
-        return cache, chosen
+        return cache, _choose_last(tokens, lens, last_logits)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _prefill_into_slot(cache, slot, tokens, lens):
+        cache, last_logits = tx.prefill_into_slot(cfg, params, cache, slot,
+                                                  tokens, lens)
+        return cache, _choose_last(tokens, lens, last_logits)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def _tree_step(cache, cache_lens, tokens, pos, mask):
         cache, logits = tx.tree_step(cfg, params, cache, cache_lens,
                                      tokens, pos, mask)
+        if logits_transform is not None:
+            logits = logits_transform(logits, tokens, pos)
         chosen = choose(logits, pos + 1)
         return cache, chosen
 
@@ -42,8 +76,18 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
     def _commit(cache, cache_lens, gather_idx, n_accept):
         return tx.commit_cache(cache, cache_lens, gather_idx, n_accept)
 
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _reset_slot(cache, slot):
+        return tx.reset_slot(cache, slot)
+
+    def _init_cache(lanes: int):
+        return tx.init_cache(cfg, lanes)
+
     return StepFns(prefill=_prefill, tree_step=_tree_step, commit=_commit,
-                   slots=slots, max_seq_len=cfg.max_seq_len, pad_id=pad_id)
+                   slots=slots, max_seq_len=cfg.max_seq_len, pad_id=pad_id,
+                   init_cache=_init_cache,
+                   prefill_into_slot=_prefill_into_slot,
+                   reset_slot=_reset_slot, prefill_len=prefill_len)
 
 
 __all__ = ["make_session_fns"]

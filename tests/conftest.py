@@ -1,6 +1,77 @@
+import inspect
 import os
+import random
 import sys
+import types
 
 # Tests run on ONE device (the dry-run sets its own 512-device env in a
 # subprocess / separate invocation — never globally).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# --------------------------------------------------------------------------
+# Optional-hypothesis shim: on a bare environment the property tests still
+# collect and run against pseudo-random examples drawn from a tiny stand-in
+# implementing exactly the strategy surface this suite uses
+# (st.integers, st.lists, @given, @settings).  With the real hypothesis
+# installed the shim is inert.
+# --------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _lists(elements, min_size=0, max_size=8):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements._draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _given(*strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # hypothesis fills the RIGHTMOST positional params from the
+            # strategies, in order; anything left of them stays a fixture
+            n = len(strategies)
+            drawn_names = [p.name for p in params[len(params) - n:]]
+
+            def wrapper(*args, **kwargs):
+                n_ex = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n_ex):
+                    drawn = {name: s._draw(rng)
+                             for name, s in zip(drawn_names, strategies)}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            # hide the drawn params from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - n])
+            return wrapper
+        return deco
+
+    def _settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.lists = _lists
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,182 @@
+"""Continuous-batching scheduler invariants (DESIGN.md §Scheduler).
+
+I1: per-request losslessness — a request's tokens equal reference_decode
+    output regardless of arrival order, slot assignment or co-batched
+    requests (greedy AND position-keyed sample mode).
+I2: fixed shapes — every StepFns member compiles exactly once per engine.
+I3: the committed cache prefix of a lane equals the stepwise cache.
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LookaheadConfig, LookaheadEngine, reference_decode
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.session import make_session_fns
+
+PREFILL = 48
+
+
+@pytest.fixture(scope="module")
+def fns():
+    cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                            d_ff=128, vocab_size=101, max_seq_len=320)
+    params = init_params(cfg, jax.random.key(0))
+    return make_session_fns(cfg, params, slots=17, prefill_len=PREFILL)
+
+
+@pytest.fixture(scope="module")
+def sample_fns():
+    cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                            d_ff=128, vocab_size=101, max_seq_len=320)
+    params = init_params(cfg, jax.random.key(2))
+    return make_session_fns(cfg, params, sample=True, temperature=0.8,
+                            base_key=jax.random.key(7), slots=17,
+                            prefill_len=PREFILL)
+
+
+def _prompts(n, lo=8, hi=40, vocab=100, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, vocab, size=rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+def _la(**kw):
+    base = dict(decoding_length=16, branch_length=6)
+    base.update(kw)
+    return LookaheadConfig(**base)
+
+
+def test_scheduler_lossless_any_arrival_order(fns):
+    """I1: same outputs for every submission order of the same request set."""
+    prompts = _prompts(4, seed=11)
+    refs = [reference_decode(fns, p, 24) for p in prompts]
+    for order in itertools.permutations(range(4)):
+        sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL)
+        rids = {}
+        for i in order:
+            rids[sched.submit(prompts[i], 24)] = i
+        res = sched.run()
+        for r in res:
+            assert r.tokens == refs[rids[r.rid]], order
+
+
+def test_scheduler_lossless_mixed_budgets(fns):
+    """Short requests leave mid-flight; late requests join freed slots; every
+    output still equals the (budget-truncated) reference."""
+    prompts = _prompts(7, seed=12)
+    budgets = [3, 28, 1, 9, 28, 2, 14]
+    refs = [reference_decode(fns, p, m) for p, m in zip(prompts, budgets)]
+    sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL)
+    for p, m in zip(prompts, budgets):
+        sched.submit(p, m)
+    res = sched.run()
+    assert len(res) == len(prompts)
+    for r, ref in zip(res, refs):
+        assert r.tokens == ref
+    # the pool really was reused: more requests than lanes were admitted
+    assert sched.stats.admitted == len(prompts)
+    assert sched.stats.finished == len(prompts)
+    assert sched.stats.occupancy > 0.5
+
+
+def test_scheduler_lossless_sampling(sample_fns):
+    """I1 in sample mode: the position-keyed RNG makes sampling a pure
+    function of (key, absolute position, logits) — batch composition and
+    slot assignment must not leak into the stream."""
+    prompts = _prompts(5, seed=13)
+    refs = [reference_decode(sample_fns, p, 20) for p in prompts]
+    sched = ContinuousScheduler(sample_fns, _la(decoding_length=12),
+                                lanes=2, prefill_len=PREFILL)
+    for p in prompts:
+        sched.submit(p, 20)
+    for r, ref in zip(sched.run(), refs):
+        assert r.tokens == ref
+
+
+def test_engine_wrapper_routes_through_scheduler(fns):
+    """generate/generate_batch keep their contract on the scheduler path and
+    agree with the legacy lock-step loop."""
+    prompts = _prompts(3, seed=14)
+    eng = LookaheadEngine(fns, _la())
+    outs = eng.generate_batch(prompts, 24)
+    eng2 = LookaheadEngine(fns, _la())
+    locks = eng2.generate_batch_lockstep(prompts, 24)
+    for a, b in zip(outs, locks):
+        assert a.tokens == b.tokens
+    one = LookaheadEngine(fns, _la()).generate(prompts[0], 24)
+    assert one.tokens == outs[0].tokens
+
+
+def test_step_fns_compile_once():
+    """I2: varying prompt lengths, budgets and request counts never retrace
+    the jitted step functions — one executable per (lanes, T) /
+    (lanes, prefill_len) / (1, prefill_len) shape."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=53, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(5))
+    fresh = make_session_fns(cfg, params, slots=9, prefill_len=PREFILL)
+    la = _la(decoding_length=8, branch_length=4)
+    # several scheduler generations with different workloads, same lanes
+    for seed, n, budget in [(40, 5, 12), (41, 3, 7), (42, 4, 20)]:
+        sched = ContinuousScheduler(fresh, la, lanes=2, prefill_len=PREFILL)
+        for p in _prompts(n, lo=4, hi=40, vocab=52, seed=seed):
+            sched.submit(p, budget)
+        sched.run()
+    assert fresh.prefill._cache_size() == 1           # (lanes, prefill_len)
+    assert fresh.prefill_into_slot._cache_size() == 1  # (1, prefill_len)
+    assert fresh.tree_step._cache_size() == 1          # (lanes, T)
+    assert fresh.commit._cache_size() == 1
+
+
+def test_reset_slot_scrubs_one_lane_only():
+    """reset_slot zeroes exactly the freed lane's KV rows (debug scrub; I3
+    means correctness never depends on it)."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=53, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(6))
+    fns = make_session_fns(cfg, params, slots=9, prefill_len=16)
+    toks = np.asarray(_prompts(2, lo=10, hi=11, vocab=52, seed=50),
+                      dtype=np.int32)
+    toks = np.pad(toks, ((0, 0), (0, 16 - toks.shape[1])))
+    lens = np.asarray([10, 10], dtype=np.int32)
+    cache, _ = fns.prefill(toks, lens)
+    before = {k: np.asarray(v).copy() for k, v in cache.items()}
+    cache = fns.reset_slot(cache, 1)
+    after = {k: np.asarray(v) for k, v in cache.items()}
+    for k in ("k", "v"):
+        np.testing.assert_array_equal(after[k][:, 0], before[k][:, 0])
+        assert not after[k][:, 1].any()
+
+
+def test_prefill_into_slot_matches_batched_prefill(fns):
+    """I3 at admission: admitting request r into lane l writes the same KV
+    rows a batched prefill would have put there."""
+    prompts = _prompts(3, lo=6, hi=20, seed=15)
+    toks = np.zeros((3, PREFILL), dtype=np.int32)
+    lens = np.zeros((3,), dtype=np.int32)
+    for b, p in enumerate(prompts):
+        toks[b, :len(p)] = p
+        lens[b] = len(p)
+    cache_ref, roots_ref = fns.prefill(toks, lens)
+    cache_ref = {k: np.asarray(v) for k, v in cache_ref.items()}
+    roots_ref = np.asarray(roots_ref)
+
+    cache = fns.init_cache(3)
+    roots = []
+    for lane in (2, 0, 1):   # deliberately out of order
+        cache, r = fns.prefill_into_slot(
+            cache, lane, toks[lane][None], lens[lane][None])
+        roots.append((lane, int(np.asarray(r)[0])))
+    for lane, root in roots:
+        assert root == int(roots_ref[lane])
+        n = int(lens[lane])
+        np.testing.assert_allclose(
+            np.asarray(cache["k"])[:, lane, :n],
+            cache_ref["k"][:, lane, :n], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(cache["v"])[:, lane, :n],
+            cache_ref["v"][:, lane, :n], rtol=1e-5, atol=1e-5)
