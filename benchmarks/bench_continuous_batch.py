@@ -1,4 +1,5 @@
-"""Continuous batching vs lock-step batching on a mixed-length workload.
+"""Continuous batching vs lock-step batching on a mixed-length workload,
+optionally swept over the attention-backend registry.
 
 The workload alternates short and long ``max_new_tokens`` budgets.  Lock-step
 serving chunks requests into fixed batches and every chunk drains at its
@@ -6,13 +7,19 @@ slowest member — short requests occupy a device lane doing nothing.  The
 slot-based scheduler admits the next queued request into the freed lane
 mid-flight, so the same device-step shapes deliver more tokens per wall
 second.  Per-request outputs are asserted identical (losslessness is
-independent of batch composition).
+independent of batch composition) — and, in backend-matrix mode, identical
+across every attention backend (dense / pallas / flash_decode), which is the
+registry's I1 contract.
+
+    PYTHONPATH=src python -m benchmarks.bench_continuous_batch \
+        --backends all --queries 8 --max-new 32
 
 Output CSV: name,us_per_token,tok/s | steps | occupancy
 """
 from __future__ import annotations
 
 import time
+from typing import Sequence, Tuple
 
 from benchmarks.common import (VOCAB, bench_model, emit,
                                make_dataset, make_guided_session_fns)
@@ -23,30 +30,35 @@ PREFILL_LEN = 64
 LANES = 4
 
 
-def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES) -> None:
+def _continuous(fns, la, prompts, budgets, lanes) -> Tuple[list, float, object]:
+    sched = ContinuousScheduler(fns, la, lanes=lanes,
+                                prefill_len=PREFILL_LEN)
+    t0 = time.perf_counter()
+    for p, m in zip(prompts, budgets):
+        sched.submit(p, m)
+    out = sched.run()
+    return out, time.perf_counter() - t0, sched.stats
+
+
+def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
+        backends: Sequence[str] = ("dense",)) -> None:
     # continuous batching only differs from lock-step when a queue exists
     # behind the lane pool; keep at least a 2x oversubscription
     lanes = max(2, min(lanes, n_queries // 2))
     cfg, params = bench_model()
     la = LookaheadConfig(decoding_length=16, branch_length=8)
-    fns = make_guided_session_fns(cfg, params, phase=2, slots=la.slots,
-                                  prefill_len=PREFILL_LEN)
     ds = make_dataset("antrag", n_queries, prompt_cap=PREFILL_LEN - 8)
     prompts = [p for p, _ in ds]
     # mixed-length: every other request is short (the continuous-batching case)
     budgets = [max_new if i % 2 else max(max_new // 8, 2)
                for i in range(len(prompts))]
 
-    # --- warmup: compile every device fn for both paths (throwaway tries)
+    # --- lock-step baseline (dense backend): chunks of `lanes`, each chunk
+    # drains at its slowest member
+    fns = make_guided_session_fns(cfg, params, phase=2, slots=la.slots,
+                                  prefill_len=PREFILL_LEN)
     warm_lock = LookaheadEngine(fns, la)
     warm_lock.generate_batch_lockstep(prompts[:lanes], 4)
-    warm_cont = ContinuousScheduler(fns, la, lanes=lanes,
-                                    prefill_len=PREFILL_LEN)
-    for p in prompts[:lanes]:
-        warm_cont.submit(p, 4)
-    warm_cont.run()
-
-    # --- lock-step: chunks of `lanes`, each chunk drains at its slowest
     eng = LookaheadEngine(fns, la)
     t0 = time.perf_counter()
     lock_out = []
@@ -58,32 +70,51 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES) -> None:
         lock_steps += max(o.stats.steps for o in outs)
     lock_wall = time.perf_counter() - t0
     lock_tok = sum(len(o.tokens) for o in lock_out)
-
-    # --- continuous: same lanes, admission queue keeps them full
-    sched = ContinuousScheduler(fns, la, lanes=lanes,
-                                prefill_len=PREFILL_LEN)
-    t0 = time.perf_counter()
-    for p, m in zip(prompts, budgets):
-        sched.submit(p, m)
-    cont_out = sched.run()
-    cont_wall = time.perf_counter() - t0
-    cont_tok = sum(len(o.tokens) for o in cont_out)
-
-    # --- losslessness across serving disciplines
-    assert len(lock_out) == len(cont_out)
-    for a, b in zip(lock_out, cont_out):
-        assert a.tokens == b.tokens, "continuous batching changed an output"
-    assert cont_tok == lock_tok
-
     lock_tps = lock_tok / lock_wall
-    cont_tps = cont_tok / cont_wall
     emit("batch_lockstep", lock_wall / lock_tok * 1e6,
          f"{lock_tps:.1f} tok/s | {lock_steps} batch-steps")
-    emit("batch_continuous", cont_wall / cont_tok * 1e6,
-         f"{cont_tps:.1f} tok/s | {sched.stats.decode_steps} steps | "
-         f"occupancy {sched.stats.occupancy:.2f}")
-    emit("continuous_speedup", 0.0, f"{cont_tps / lock_tps:.2f}x")
+
+    # --- continuous: same lanes, admission queue keeps them full; one run
+    # per attention backend, outputs asserted identical across all of them
+    for backend in backends:
+        fns_b = fns if backend == "dense" else make_guided_session_fns(
+            cfg, params, phase=2, slots=la.slots, prefill_len=PREFILL_LEN,
+            backend=backend)
+        warm, _, _ = _continuous(fns_b, la, prompts[:lanes],
+                                 [4] * lanes, lanes)     # compile warmup
+        cont_out, cont_wall, stats = _continuous(fns_b, la, prompts,
+                                                 budgets, lanes)
+        cont_tok = sum(len(o.tokens) for o in cont_out)
+
+        # --- losslessness across serving disciplines AND backends
+        assert len(lock_out) == len(cont_out)
+        for a, b in zip(lock_out, cont_out):
+            assert a.tokens == b.tokens, \
+                f"backend {backend!r} changed an output"
+        assert cont_tok == lock_tok
+
+        cont_tps = cont_tok / cont_wall
+        emit(f"batch_continuous[{backend}]", cont_wall / cont_tok * 1e6,
+             f"{cont_tps:.1f} tok/s | {stats.decode_steps} steps | "
+             f"occupancy {stats.occupancy:.2f}")
+        emit(f"continuous_speedup[{backend}]", 0.0,
+             f"{cont_tps / lock_tps:.2f}x")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    from repro.models.attention import available_backends
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default="dense",
+                    help="comma-separated backend names, or 'all' for every "
+                         f"registered backend ({', '.join(available_backends())})")
+    ap.add_argument("--queries", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=96)
+    ap.add_argument("--lanes", type=int, default=LANES)
+    args = ap.parse_args()
+    names = (available_backends() if args.backends == "all"
+             else tuple(args.backends.split(",")))
+    run(n_queries=args.queries, max_new=args.max_new, lanes=args.lanes,
+        backends=names)

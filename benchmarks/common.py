@@ -48,7 +48,8 @@ PROFILE_PHASE = {"antrag": 2, "humaneval": 3, "gsm8k": 5, "dolly": 11}
 
 def make_guided_session_fns(cfg, params, *, phase: int, seed: int = 0,
                             slots: int = 33, pad_id: int = 0,
-                            prefill_len: Optional[int] = None):
+                            prefill_len: Optional[int] = None,
+                            backend: Optional[str] = None):
     import jax.numpy as jnp
 
     rng = np.random.RandomState(seed + 1000 * phase)
@@ -66,7 +67,8 @@ def make_guided_session_fns(cfg, params, *, phase: int, seed: int = 0,
                                              dtype=logits.dtype)
 
     return make_session_fns(cfg, params, slots=slots, pad_id=pad_id,
-                            prefill_len=prefill_len, logits_transform=bias)
+                            prefill_len=prefill_len, logits_transform=bias,
+                            backend=backend)
 
 
 @dataclass

@@ -30,7 +30,19 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="fewer queries per benchmark")
+    ap.add_argument("--backends", default=None,
+                    help="backend-matrix smoke mode: comma-separated "
+                         "attention backends (or 'all') passed to benchmarks "
+                         "that accept them — contbatch then reports tok/s "
+                         "per backend")
     args = ap.parse_args()
+    backends = None
+    if args.backends:
+        if args.backends == "all":
+            from repro.models.attention import available_backends
+            backends = available_backends()
+        else:
+            backends = tuple(args.backends.split(","))
     failures = 0
     for name, module in BENCHES:
         if args.only and args.only != name:
@@ -39,10 +51,13 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(module)
-            if args.quick and "n_queries" in mod.run.__code__.co_varnames:
-                mod.run(n_queries=4, max_new=32)
-            else:
-                mod.run()
+            varnames = mod.run.__code__.co_varnames
+            kw = {}
+            if args.quick and "n_queries" in varnames:
+                kw.update(n_queries=4, max_new=32)
+            if backends is not None and "backends" in varnames:
+                kw["backends"] = backends
+            mod.run(**kw)
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}",

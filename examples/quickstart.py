@@ -37,6 +37,17 @@ def main() -> None:
           f"(= speedup in the IO-bound decode regime)")
     print("LOSSLESS ✓ — identical to step-by-step greedy decoding")
 
+    # attention-backend selection: the same session under the Pallas
+    # tree-attention / flash-prefill kernels (compiled on TPU, interpret
+    # mode elsewhere) — outputs stay bit-identical per backend (I1)
+    fns_pallas = make_session_fns(cfg, params, slots=la.slots,
+                                  backend="pallas")
+    engine_pallas = LookaheadEngine(fns_pallas, la)
+    engine_pallas.warmup([ref])
+    out_pallas = engine_pallas.generate(prompt, max_new_tokens=64)
+    assert out_pallas.tokens == out.tokens, "backend changed an output!"
+    print("pallas backend ✓ — same tokens through the blocked kernels")
+
 
 if __name__ == "__main__":
     main()

@@ -99,13 +99,19 @@ def _perf_overrides(cfg: tx.TransformerConfig) -> tx.TransformerConfig:
 
 
 def build_cell(arch: str, base: tx.TransformerConfig, shape: str,
-               mesh=None, fast: bool = False) -> Cell:
+               mesh=None, fast: bool = False,
+               prefill_backend: str = None,
+               decode_backend: str = None) -> Cell:
     # fast=True keeps lax.scan over layers (quick compile; multi-pod leg);
     # fast=False unrolls for accurate cost_analysis (roofline leg).
+    # prefill_backend/decode_backend override the per-phase attention
+    # backends (repro.models.attention registry); decode cells default to
+    # the sharded flash_decode path, everything else to dense.
     key = jax.random.key(0)
     if shape == "train_4k":
         cfg = dataclasses.replace(base, dtype="bfloat16", remat=True,
                                   q_chunk=512, max_seq_len=4096,
+                                  prefill_backend=prefill_backend or "dense",
                                   moe_impl="auto", scan_layers=fast)
         cfg = _perf_overrides(cfg)
         B, S = 256, 4096
@@ -134,6 +140,7 @@ def build_cell(arch: str, base: tx.TransformerConfig, shape: str,
         cfg = dataclasses.replace(base, dtype="bfloat16",
                                   param_dtype="bfloat16", q_chunk=1024,
                                   max_seq_len=32768, moe_impl="auto",
+                                  prefill_backend=prefill_backend or "dense",
                                   scan_layers=fast)
         cfg = _perf_overrides(cfg)
         B, S = 32, 32768
@@ -158,7 +165,8 @@ def build_cell(arch: str, base: tx.TransformerConfig, shape: str,
         cfg = dataclasses.replace(
             base, dtype="bfloat16", param_dtype="bfloat16",
             max_seq_len=524288 if long else 32768,
-            decode_attn="flash_decode",
+            prefill_backend=prefill_backend or "dense",
+            decode_backend=decode_backend or "flash_decode",
             moe_impl="auto", scan_layers=fast)
         cfg = _perf_overrides(cfg)
         B = 1 if long else 128

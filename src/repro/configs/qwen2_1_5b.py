@@ -18,5 +18,8 @@ def smoke_config() -> TransformerConfig:
     return lm_common.smoke_config(full_config())
 
 
-def build_cell(shape: str, mesh=None, fast: bool = False):
-    return lm_common.build_cell(ARCH, full_config(), shape, mesh, fast=fast)
+def build_cell(shape: str, mesh=None, fast: bool = False, **backends):
+    # **backends: prefill_backend= / decode_backend= attention overrides
+    # (repro.models.attention registry), threaded to lm_common.build_cell.
+    return lm_common.build_cell(ARCH, full_config(), shape, mesh, fast=fast,
+                                **backends)

@@ -161,18 +161,21 @@ def repad(tree: DraftTree, total: int, pad_id: int = 0) -> DraftTree:
 
 
 def _maximal_paths(paths: Sequence[Tuple[int, ...]]) -> List[Tuple[int, ...]]:
-    """Drop paths that are prefixes of another path; keep input order."""
+    """Drop paths that are proper prefixes of another path; keep input order.
+
+    Prefix-set walk: one pass collects every proper prefix of every path,
+    a second keeps the paths absent from that set — O(total tokens) hash
+    work instead of the all-pairs O(n²·len) scan (this runs per lane per
+    decode step on the host hot path of both serving loops)."""
+    prefixes = set()
+    for p in paths:
+        for d in range(1, len(p)):
+            prefixes.add(p[:d])
     out: List[Tuple[int, ...]] = []
-    pathset = set(paths)
     seen = set()
     for p in paths:
-        if not p or p in seen:
-            continue
-        seen.add(p)
-        # p is maximal if no other selected path strictly extends it
-        extended = any(q != p and len(q) > len(p) and q[:len(p)] == p
-                       for q in pathset)
-        if not extended:
+        if p and p not in seen and p not in prefixes:
+            seen.add(p)
             out.append(p)
     return out
 

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.distributed.sharding import axis_size
+from repro.distributed.sharding import active_mesh, axis_size
 from repro.models.layers import NEG_INF
 
 
@@ -150,4 +150,33 @@ def _local_attend(q, k_new, v_new, k_c, v_c, cache_lens, tree_mask, *,
     return out.astype(q.dtype), k_c, v_c
 
 
-__all__ = ["make_flash_attend", "cache_partition_spec"]
+class FlashDecodeBackend:
+    """Attention backend (registry name ``flash_decode``) wrapping the
+    sequence-parallel shard_map decode above.
+
+    This folds the old ``decode_attn == "flash_decode"`` special case that
+    lived inside ``transformer.tree_step`` into the common backend
+    interface (repro.models.attention).  Prefill delegates to the dense
+    reference math; the decode phase uses the sharded path whenever a mesh
+    is active and otherwise degrades to dense — identical semantics, no
+    shard_map.  Imports of the registry module are deferred to call time
+    (attention.py imports this module to register the backend).
+    """
+
+    name = "flash_decode"
+
+    def prefill_attention(self, cfg, q, k, v, positions, len_mask):
+        from repro.models.attention import dense_prefill_attention
+        return dense_prefill_attention(cfg, q, k, v, positions, len_mask)
+
+    def make_tree_attend(self, cfg, cache_lens, tree_mask, S_max):
+        mesh = active_mesh()
+        if mesh is None:
+            from repro.models.attention import get_backend
+            return get_backend("dense").make_tree_attend(cfg, cache_lens,
+                                                         tree_mask, S_max)
+        return make_flash_attend(mesh, cache_lens, tree_mask,
+                                 score_f32=cfg.attn_score_f32)
+
+
+__all__ = ["make_flash_attend", "cache_partition_spec", "FlashDecodeBackend"]

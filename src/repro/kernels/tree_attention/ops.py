@@ -1,12 +1,13 @@
 """jit'd public wrapper for the tree-attention kernel.
 
 Handles layout: (B, T, H, dh) q + (B, S, K, dh) cache → grouped
-(B, K, T·G, dh), pads dh→multiple of 128 and S→multiple of block_s, and
-falls back to interpret mode off-TPU (CPU validation; the TPU build uses the
-compiled kernel)."""
+(B, K, T·G, dh), pads dh→multiple of 128 and S→multiple of block_s (padded
+rows are masked out), and auto-detects the platform for interpret mode —
+the compiled Mosaic kernel on TPU, the interpreter everywhere else."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +26,25 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def default_interpret() -> bool:
+    """Pallas TPU kernels compile only on TPU; interpret elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
 def tree_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                    mask: jax.Array, *, block_s: int = 512,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: Optional[bool] = None) -> jax.Array:
     """q (B, T, H, dh); k/v (B, S, K, dh); mask (B, T, S) → (B, T, H, dh)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _tree_attention(q, k_cache, v_cache, mask, block_s=block_s,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def _tree_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    mask: jax.Array, *, block_s: int,
+                    interpret: bool) -> jax.Array:
     B, T, H, dh = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = H // K
@@ -39,9 +54,12 @@ def tree_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     qg = _pad_to(qg, 3, 128)
     kp = _pad_to(k_cache, 3, 128)
     vp = _pad_to(v_cache, 3, 128)
-    bs = min(block_s, S) if S % min(block_s, S) == 0 else S
-    sp = (-S) % bs
-    if sp:
+    # S not divisible by block_s: pad S up to the block multiple (padded
+    # rows masked out → exp(-inf) contributes nothing) instead of collapsing
+    # to a single full-S block.  bs is capped at S rounded up to the lane
+    # multiple so short caches don't pad all the way to block_s.
+    bs = min(block_s, -(-S // 128) * 128)
+    if S % bs:
         kp = _pad_to(kp, 1, bs)
         vp = _pad_to(vp, 1, bs)
         mask = _pad_to(mask, 2, bs, value=False)
@@ -65,4 +83,4 @@ def tree_attention_reference(q, k_cache, v_cache, mask):
     return out.reshape(B, T, H, dh)
 
 
-__all__ = ["tree_attention", "tree_attention_reference"]
+__all__ = ["tree_attention", "tree_attention_reference", "default_interpret"]

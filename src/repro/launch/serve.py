@@ -23,6 +23,7 @@ import numpy as np
 
 from repro import configs as cfgreg
 from repro.core import LookaheadConfig, LookaheadEngine
+from repro.models import attention as attn_backends
 from repro.models import transformer as tx
 from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.session import make_session_fns
@@ -57,6 +58,16 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--backend", default=None,
+                    choices=attn_backends.available_backends(),
+                    help="attention backend for BOTH phases (registry: "
+                         f"{', '.join(attn_backends.available_backends())})")
+    ap.add_argument("--prefill-backend", default=None,
+                    choices=attn_backends.available_backends(),
+                    help="prefill-phase attention backend override")
+    ap.add_argument("--decode-backend", default=None,
+                    choices=attn_backends.available_backends(),
+                    help="tree-decode-phase attention backend override")
     args = ap.parse_args()
 
     mod = cfgreg.get_arch(args.arch)
@@ -80,7 +91,10 @@ def main() -> None:
     fns = make_session_fns(cfg, params, sample=args.sample,
                            temperature=args.temperature,
                            base_key=jax.random.key(0), slots=la.slots,
-                           prefill_len=args.prefill_len)
+                           prefill_len=args.prefill_len,
+                           backend=args.backend,
+                           prefill_backend=args.prefill_backend,
+                           decode_backend=args.decode_backend)
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
     prompt_cap = min(96, args.prefill_len)
     reqs = [corpus.sample()[0][:prompt_cap] for _ in range(args.requests)]

@@ -46,6 +46,18 @@ ACTS: dict = {
 }
 
 
+def causal_prefill_mask(positions: jax.Array, len_mask: jax.Array
+                        ) -> jax.Array:
+    """(B, T) positions + (B, S) valid-key mask → (B, T, S) causal mask.
+
+    Shared by the dense attention backend (repro.models.attention); the
+    Pallas flash-prefill kernel derives the same mask from block indices
+    in-kernel and never materializes it.
+    """
+    causal = positions[:, :, None] >= positions[:, None, :]
+    return causal & len_mask[:, None, :]
+
+
 def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                   mask: jax.Array, *, softmax_in_f32: bool = True
                   ) -> jax.Array:
@@ -107,5 +119,6 @@ def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     return h @ w_down
 
 
-__all__ = ["rms_norm", "rope_angles", "apply_rope", "gqa_attention",
-           "gqa_attention_chunked", "swiglu", "ACTS", "NEG_INF"]
+__all__ = ["rms_norm", "rope_angles", "apply_rope", "causal_prefill_mask",
+           "gqa_attention", "gqa_attention_chunked", "swiglu", "ACTS",
+           "NEG_INF"]

@@ -23,9 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import active_mesh, constrain
+from repro.models import attention as attn_backends
 from repro.models import moe as moe_lib
-from repro.models.layers import (ACTS, NEG_INF, apply_rope, gqa_attention,
-                                 gqa_attention_chunked, rms_norm, rope_angles,
+from repro.models.layers import (ACTS, apply_rope, rms_norm, rope_angles,
                                  swiglu)
 
 Params = Dict[str, Any]
@@ -63,8 +63,10 @@ class TransformerConfig:
                                             # bodies once; see EXPERIMENTS.md)
     q_chunk: int = 0                        # >0: chunked prefill attention
     max_seq_len: int = 512                  # KV cache allocation length
-    # attention decode path: "dense" (pjit) or "flash_decode" (seq-sharded)
-    decode_attn: str = "dense"
+    # per-phase attention backends, resolved from the registry in
+    # repro.models.attention: "dense" | "pallas" | "flash_decode"
+    prefill_backend: str = "dense"
+    decode_backend: str = "dense"
     attn_score_f32: bool = True             # False: bf16 score temps (perf)
 
     @property
@@ -239,13 +241,8 @@ def _layer_self(cfg: TransformerConfig, lp: Params, h: jax.Array,
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
-    if cfg.q_chunk and h.shape[1] % cfg.q_chunk == 0 and h.shape[1] > cfg.q_chunk:
-        attn = gqa_attention_chunked(q, k, v, positions, len_mask, cfg.q_chunk)
-    else:
-        S = h.shape[1]
-        causal = positions[:, :, None] >= positions[:, None, :]
-        m = causal & len_mask[:, None, :]
-        attn = gqa_attention(q, k, v, m)
+    backend = attn_backends.get_backend(cfg.prefill_backend)
+    attn = backend.prefill_attention(cfg, q, k, v, positions, len_mask)
     B, T, H, dh = attn.shape
     h = h + attn.reshape(B, T, H * dh) @ lp["wo"]
     h = constrain(h, "batch", "residual_seq", None)
@@ -258,15 +255,13 @@ def _layer_self(cfg: TransformerConfig, lp: Params, h: jax.Array,
 
 def _layer_tree(cfg: TransformerConfig, lp: Params, h: jax.Array,
                 positions: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                cache_lens: jax.Array, full_mask: Optional[jax.Array],
-                attend: Optional[Any] = None
+                attend: Any
                 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Tree-decode layer: T slots attend to cache + tree siblings.
 
-    k_cache/v_cache: (B, S_max, K, dh); full_mask: (B, T, S_max) precomputed
-    (past positions + tree-ancestor block).  New KV is scattered at
-    cache_len + slot before attending.  ``attend`` overrides the dense path
-    (sequence-parallel flash-decode writes + attends inside shard_map).
+    k_cache/v_cache: (B, S_max, K, dh).  ``attend`` is the backend closure
+    built by ``AttentionBackend.make_tree_attend`` — it scatters the new KV
+    at cache_len + slot, then attends the slots against the cache.
     """
     B, T, _ = h.shape
     hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
@@ -274,16 +269,7 @@ def _layer_tree(cfg: TransformerConfig, lp: Params, h: jax.Array,
     cos, sin = rope_angles(positions, cfg.dh, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
-    if attend is not None:
-        attn, k_cache, v_cache = attend(q, k, v, k_cache, v_cache)
-    else:
-        q = constrain(q, "batch", None, "heads", None)
-        bidx = jnp.arange(B)[:, None]
-        sidx = cache_lens[:, None] + jnp.arange(T)[None, :]
-        k_cache = k_cache.at[bidx, sidx].set(k.astype(k_cache.dtype))
-        v_cache = v_cache.at[bidx, sidx].set(v.astype(v_cache.dtype))
-        attn = gqa_attention(q, k_cache, v_cache, full_mask,
-                             softmax_in_f32=cfg.attn_score_f32)
+    attn, k_cache, v_cache = attend(q, k, v, k_cache, v_cache)
     H, dh = cfg.n_heads, cfg.dh
     h = h + attn.reshape(B, T, H * dh) @ lp["wo"]
     h = h + _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
@@ -411,7 +397,7 @@ def init_cache(cfg: TransformerConfig, batch: int,
 
 
 def cache_logical_axes(cfg: TransformerConfig) -> Dict[str, Tuple]:
-    if cfg.decode_attn == "flash_decode":
+    if cfg.decode_backend == "flash_decode":
         return {"k": (None, None, "kv_seq", "kv_heads", None),
                 "v": (None, None, "kv_seq", "kv_heads", None)}
     return {"k": (None, "batch", None, "kv_heads", None),
@@ -518,28 +504,11 @@ def tree_step(cfg: TransformerConfig, params: Params,
     S_max = cache["k"].shape[2]
     h = _embed(cfg, params, tokens)
 
-    mesh = active_mesh()
-    if cfg.decode_attn == "flash_decode" and mesh is not None:
-        from repro.distributed.flash_decode import make_flash_attend
-        attend = make_flash_attend(mesh, cache_lens, tree_mask,
-                                   score_f32=cfg.attn_score_f32)
-        full_mask = None
-    else:
-        attend = None
-        # full mask (B, T, S_max): past ∨ tree block
-        j = jnp.arange(S_max)[None, None, :]                  # (1,1,S)
-        past = j < cache_lens[:, None, None]
-        rel = j - cache_lens[:, None, None]                   # slot index
-        in_block = (rel >= 0) & (rel < T)
-        relc = jnp.clip(rel, 0, T - 1).astype(jnp.int32)      # (B,1,S)
-        # tm[b,i,s] = tree_mask[b, i, relc[b,0,s]]
-        tm = jnp.take_along_axis(
-            tree_mask, jnp.broadcast_to(relc, (B, T, S_max)), axis=2)
-        full_mask = past | (in_block & tm)
+    backend = attn_backends.get_backend(cfg.decode_backend)
+    attend = backend.make_tree_attend(cfg, cache_lens, tree_mask, S_max)
 
     def layer(cfg_, lp, h_, k_c, v_c):
-        return _layer_tree(cfg_, lp, h_, positions, k_c, v_c, cache_lens,
-                           full_mask, attend)
+        return _layer_tree(cfg_, lp, h_, positions, k_c, v_c, attend)
 
     h, kv = _scan_layers(cfg, params, h, layer,
                          extra_xs=(cache["k"], cache["v"]), extra_args=(),

@@ -13,6 +13,7 @@ distinct prompt length.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Optional
 
@@ -20,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.request import StepFns
+from repro.models import attention as attn_backends
 from repro.models import transformer as tx
 from repro.serving.sampler import choose_tokens
 
@@ -29,7 +31,10 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                      base_key: Optional[jax.Array] = None,
                      slots: int = 1, pad_id: int = 0,
                      prefill_len: Optional[int] = None,
-                     logits_transform: Optional[Callable] = None) -> StepFns:
+                     logits_transform: Optional[Callable] = None,
+                     backend: Optional[str] = None,
+                     prefill_backend: Optional[str] = None,
+                     decode_backend: Optional[str] = None) -> StepFns:
     """Jitted prefill / prefill_into_slot / tree_step / commit closures over
     ``params``.
 
@@ -39,7 +44,25 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
     ``logits_transform(logits, tokens, positions)`` optionally rewrites the
     step logits before token choice (the benchmarks' guided model) — it must
     stay a pure function of (token, position) to preserve losslessness.
+
+    ``backend`` overrides both attention phases at once;
+    ``prefill_backend`` / ``decode_backend`` override one phase (names are
+    resolved against the repro.models.attention registry — bad names fail
+    here, not at trace time).
     """
+    overrides = {}
+    if backend is not None:
+        overrides["prefill_backend"] = backend
+        overrides["decode_backend"] = backend
+    if prefill_backend is not None:
+        overrides["prefill_backend"] = prefill_backend
+    if decode_backend is not None:
+        overrides["decode_backend"] = decode_backend
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    attn_backends.get_backend(cfg.prefill_backend)
+    attn_backends.get_backend(cfg.decode_backend)
+
     choose = functools.partial(choose_tokens, sample=sample,
                                temperature=temperature, base_key=base_key)
 

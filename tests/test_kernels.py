@@ -11,6 +11,8 @@ from repro.kernels.flash_prefill.ops import (flash_prefill,
 from repro.kernels.tree_attention.ops import (tree_attention,
                                               tree_attention_reference)
 
+pytestmark = pytest.mark.kernels
+
 RNG = np.random.RandomState(0)
 
 
@@ -74,6 +76,41 @@ def test_embedding_bag_sweep(V, D, N, L, dtype):
                                   w * m.astype(jnp.float32))
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,T,H,K,dh,S,bs", [
+    (2, 5, 4, 2, 64, 320, 128),   # S % block_s != 0: padded to 384, 3 blocks
+    (1, 9, 4, 4, 96, 200, 128),   # ragged S AND padded dh
+    (2, 7, 8, 2, 64, 640, 512),   # the old collapse case: now 2x512 blocks
+])
+def test_tree_attention_ragged_s_keeps_blocking(B, T, H, K, dh, S, bs):
+    """S not divisible by block_s pads up to the block multiple (masked
+    rows) instead of silently collapsing to one full-S block; interpret
+    mode is auto-detected from the platform (no explicit flag)."""
+    q = jnp.asarray(RNG.randn(B, T, H, dh), jnp.float32) * 0.3
+    k = jnp.asarray(RNG.randn(B, S, K, dh), jnp.float32) * 0.3
+    v = jnp.asarray(RNG.randn(B, S, K, dh), jnp.float32) * 0.3
+    mask = jnp.asarray(RNG.rand(B, T, S) > 0.4).at[:, :, 0].set(True)
+    out = tree_attention(q, k, v, mask, block_s=bs)
+    ref = tree_attention_reference(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,K,dh", [
+    (2, 320, 4, 2, 64),           # S % 256 != 0 → shared-block padding path
+    (1, 300, 6, 3, 80),           # ragged S AND padded dh
+])
+def test_flash_prefill_ragged_s(B, S, H, K, dh):
+    """Ragged prefill lengths pad S to a block multiple; causality keeps the
+    pad keys invisible to real queries."""
+    q = jnp.asarray(RNG.randn(B, S, H, dh), jnp.float32) * 0.3
+    k = jnp.asarray(RNG.randn(B, S, K, dh), jnp.float32) * 0.3
+    v = jnp.asarray(RNG.randn(B, S, K, dh), jnp.float32) * 0.3
+    out = flash_prefill(q, k, v, block_q=256, block_k=512)
+    ref = flash_prefill_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=1e-4)
 
 
 def test_tree_attention_matches_model_semantics():

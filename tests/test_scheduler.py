@@ -97,6 +97,33 @@ def test_scheduler_lossless_sampling(sample_fns):
         assert r.tokens == ref
 
 
+@pytest.mark.parametrize("backend", ["dense", "pallas", "flash_decode"])
+def test_scheduler_lossless_per_backend(backend):
+    """I1 holds under every attention backend: scheduler outputs equal
+    reference_decode run through the SAME backend, and equal the dense
+    outputs bit-for-bit (registry contract, DESIGN.md §Attention
+    backends)."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=53, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(3))
+    prompts = _prompts(4, lo=4, hi=24, vocab=52, seed=21)
+    outs = {}
+    for name in ("dense", backend):
+        fns_b = make_session_fns(cfg, params, slots=9, prefill_len=32,
+                                 backend=name)
+        refs = [reference_decode(fns_b, p, 12) for p in prompts]
+        sched = ContinuousScheduler(fns_b, _la(decoding_length=8,
+                                               branch_length=4),
+                                    lanes=2, prefill_len=32)
+        for p in prompts:
+            sched.submit(p, 12)
+        res = sched.run()
+        for r, ref in zip(res, refs):
+            assert r.tokens == ref, name
+        outs[name] = [r.tokens for r in res]
+    assert outs[backend] == outs["dense"]
+
+
 def test_engine_wrapper_routes_through_scheduler(fns):
     """generate/generate_batch keep their contract on the scheduler path and
     agree with the legacy lock-step loop."""

@@ -58,7 +58,7 @@ def test_flash_decode_equals_dense_8dev():
                 m[i, j] = True; j = parent[j]
         mask = jnp.asarray(np.stack([m] * B))
         c1, l1 = tx.tree_step(cfg, params, dict(cache), lens, toks, pos, mask)
-        cfg2 = dataclasses.replace(cfg, decode_attn="flash_decode")
+        cfg2 = dataclasses.replace(cfg, decode_backend="flash_decode")
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         with sharding_ctx(mesh):
             fn = jax.jit(lambda c, le, t, p, mm:
