@@ -1,5 +1,6 @@
 """Continuous batching vs lock-step batching on a mixed-length workload,
-optionally swept over the attention-backend registry.
+optionally swept over the attention-backend registry and the KV-cache
+layouts (dense vs paged).
 
 The workload alternates short and long ``max_new_tokens`` budgets.  Lock-step
 serving chunks requests into fixed batches and every chunk drains at its
@@ -7,12 +8,17 @@ slowest member — short requests occupy a device lane doing nothing.  The
 slot-based scheduler admits the next queued request into the freed lane
 mid-flight, so the same device-step shapes deliver more tokens per wall
 second.  Per-request outputs are asserted identical (losslessness is
-independent of batch composition) — and, in backend-matrix mode, identical
-across every attention backend (dense / pallas / flash_decode), which is the
-registry's I1 contract.
+independent of batch composition) — and, in matrix mode, identical across
+every attention backend (dense / pallas / flash_decode) AND every KV layout
+(registry I1 contract + DESIGN.md §Paged KV cache).
+
+The paged runs size their block pool to the workload's worst-case footprint
+(prompt + budget + tree width) instead of lanes * max_seq_len, so the
+benchmark also reports peak KV-cache bytes per layout and asserts the paged
+pool is strictly smaller at equal lane count.
 
     PYTHONPATH=src python -m benchmarks.bench_continuous_batch \
-        --backends all --queries 8 --max-new 32
+        --backends all --kv-layout dense,paged --queries 8 --max-new 32
 
 Output CSV: name,us_per_token,tok/s | steps | occupancy
 """
@@ -28,20 +34,26 @@ from repro.serving.scheduler import ContinuousScheduler
 
 PREFILL_LEN = 64
 LANES = 4
+BLOCK_SIZE = 64
 
 
-def _continuous(fns, la, prompts, budgets, lanes) -> Tuple[list, float, object]:
+def _continuous(fns, la, prompts, budgets, lanes
+                ) -> Tuple[list, float, object, int]:
     sched = ContinuousScheduler(fns, la, lanes=lanes,
                                 prefill_len=PREFILL_LEN)
     t0 = time.perf_counter()
     for p, m in zip(prompts, budgets):
         sched.submit(p, m)
     out = sched.run()
-    return out, time.perf_counter() - t0, sched.stats
+    wall = time.perf_counter() - t0
+    cache_bytes = sum(v.nbytes for v in sched.cache.values()) \
+        if sched.cache is not None else 0
+    return out, wall, sched.stats, cache_bytes
 
 
 def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
-        backends: Sequence[str] = ("dense",)) -> None:
+        backends: Sequence[str] = ("dense",),
+        kv_layouts: Sequence[str] = ("dense",)) -> None:
     # continuous batching only differs from lock-step when a queue exists
     # behind the lane pool; keep at least a 2x oversubscription
     lanes = max(2, min(lanes, n_queries // 2))
@@ -75,30 +87,62 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
          f"{lock_tps:.1f} tok/s | {lock_steps} batch-steps")
 
     # --- continuous: same lanes, admission queue keeps them full; one run
-    # per attention backend, outputs asserted identical across all of them
-    for backend in backends:
-        fns_b = fns if backend == "dense" else make_guided_session_fns(
-            cfg, params, phase=2, slots=la.slots, prefill_len=PREFILL_LEN,
-            backend=backend)
-        warm, _, _ = _continuous(fns_b, la, prompts[:lanes],
-                                 [4] * lanes, lanes)     # compile warmup
-        cont_out, cont_wall, stats = _continuous(fns_b, la, prompts,
-                                                 budgets, lanes)
-        cont_tok = sum(len(o.tokens) for o in cont_out)
+    # per (kv layout, attention backend), outputs asserted identical across
+    # all of them.  Paged pools are sized to the workload's worst case, not
+    # lanes * max_seq_len.
+    from repro.serving.block_allocator import demand_blocks
+    dense_eq_blocks = -(-cfg.max_seq_len // BLOCK_SIZE)
+    per_lane_blocks = demand_blocks(PREFILL_LEN, max_new, la.slots,
+                                    cfg.max_seq_len, BLOCK_SIZE)
+    paged_blocks = 1 + lanes * per_lane_blocks
+    layout_bytes = {}
+    for layout in kv_layouts:
+        for backend in backends:
+            if layout == "dense" and backend == "dense":
+                fns_b = fns
+            else:
+                fns_b = make_guided_session_fns(
+                    cfg, params, phase=2, slots=la.slots,
+                    prefill_len=PREFILL_LEN, backend=backend,
+                    kv_layout=layout,
+                    block_size=BLOCK_SIZE if layout == "paged" else None,
+                    n_blocks=paged_blocks if layout == "paged" else None)
+            warm, _, _, _ = _continuous(fns_b, la, prompts[:lanes],
+                                        [4] * lanes, lanes)  # compile warmup
+            cont_out, cont_wall, stats, cache_bytes = _continuous(
+                fns_b, la, prompts, budgets, lanes)
+            cont_tok = sum(len(o.tokens) for o in cont_out)
+            layout_bytes[layout] = cache_bytes
 
-        # --- losslessness across serving disciplines AND backends
-        assert len(lock_out) == len(cont_out)
-        for a, b in zip(lock_out, cont_out):
-            assert a.tokens == b.tokens, \
-                f"backend {backend!r} changed an output"
-        assert cont_tok == lock_tok
+            # --- losslessness across serving disciplines, backends, layouts
+            assert len(lock_out) == len(cont_out)
+            for a, b in zip(lock_out, cont_out):
+                assert a.tokens == b.tokens, \
+                    f"kv_layout {layout!r} / backend {backend!r} changed " \
+                    "an output"
+            assert cont_tok == lock_tok
 
-        cont_tps = cont_tok / cont_wall
-        emit(f"batch_continuous[{backend}]", cont_wall / cont_tok * 1e6,
-             f"{cont_tps:.1f} tok/s | {stats.decode_steps} steps | "
-             f"occupancy {stats.occupancy:.2f}")
-        emit(f"continuous_speedup[{backend}]", 0.0,
-             f"{cont_tps / lock_tps:.2f}x")
+            cont_tps = cont_tok / cont_wall
+            tag = f"{layout}/{backend}"
+            emit(f"batch_continuous[{tag}]", cont_wall / cont_tok * 1e6,
+                 f"{cont_tps:.1f} tok/s | {stats.decode_steps} steps | "
+                 f"occupancy {stats.occupancy:.2f}")
+            emit(f"continuous_speedup[{tag}]", 0.0,
+                 f"{cont_tps / lock_tps:.2f}x")
+        extra = (f" | peak {stats.peak_blocks} blocks | "
+                 f"{stats.block_waits} block-waits"
+                 if layout == "paged" else "")
+        emit(f"kv_cache_bytes[{layout}]", 0.0,
+             f"{layout_bytes[layout] / 2**20:.2f} MiB{extra}")
+    if "dense" in layout_bytes and "paged" in layout_bytes:
+        # the strict-savings claim only holds when the workload footprint is
+        # below max_seq_len; at the cap the paged pool costs one extra NULL
+        # block (+ tables) for identical coverage
+        if per_lane_blocks < dense_eq_blocks:
+            assert layout_bytes["paged"] < layout_bytes["dense"], \
+                layout_bytes
+        emit("kv_cache_savings[paged/dense]", 0.0,
+             f"{layout_bytes['dense'] / layout_bytes['paged']:.2f}x")
 
 
 if __name__ == "__main__":
@@ -110,11 +154,16 @@ if __name__ == "__main__":
     ap.add_argument("--backends", default="dense",
                     help="comma-separated backend names, or 'all' for every "
                          f"registered backend ({', '.join(available_backends())})")
+    ap.add_argument("--kv-layout", default="dense",
+                    help="comma-separated KV layouts (dense, paged) or "
+                         "'all' for both")
     ap.add_argument("--queries", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=96)
     ap.add_argument("--lanes", type=int, default=LANES)
     args = ap.parse_args()
     names = (available_backends() if args.backends == "all"
              else tuple(args.backends.split(",")))
+    layouts = (("dense", "paged") if args.kv_layout == "all"
+               else tuple(args.kv_layout.split(",")))
     run(n_queries=args.queries, max_new=args.max_new, lanes=args.lanes,
-        backends=names)
+        backends=names, kv_layouts=layouts)

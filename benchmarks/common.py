@@ -49,7 +49,10 @@ PROFILE_PHASE = {"antrag": 2, "humaneval": 3, "gsm8k": 5, "dolly": 11}
 def make_guided_session_fns(cfg, params, *, phase: int, seed: int = 0,
                             slots: int = 33, pad_id: int = 0,
                             prefill_len: Optional[int] = None,
-                            backend: Optional[str] = None):
+                            backend: Optional[str] = None,
+                            kv_layout: Optional[str] = None,
+                            block_size: Optional[int] = None,
+                            n_blocks: Optional[int] = None):
     import jax.numpy as jnp
 
     rng = np.random.RandomState(seed + 1000 * phase)
@@ -68,7 +71,8 @@ def make_guided_session_fns(cfg, params, *, phase: int, seed: int = 0,
 
     return make_session_fns(cfg, params, slots=slots, pad_id=pad_id,
                             prefill_len=prefill_len, logits_transform=bias,
-                            backend=backend)
+                            backend=backend, kv_layout=kv_layout,
+                            block_size=block_size, n_blocks=n_blocks)
 
 
 @dataclass

@@ -35,6 +35,11 @@ def main() -> None:
                          "attention backends (or 'all') passed to benchmarks "
                          "that accept them — contbatch then reports tok/s "
                          "per backend")
+    ap.add_argument("--kv-layout", default=None,
+                    help="KV-layout matrix mode: comma-separated layouts "
+                         "(dense, paged) or 'all', passed to benchmarks "
+                         "that accept them — the contbatch backend sweep "
+                         "then covers both layouts")
     args = ap.parse_args()
     backends = None
     if args.backends:
@@ -43,6 +48,10 @@ def main() -> None:
             backends = available_backends()
         else:
             backends = tuple(args.backends.split(","))
+    kv_layouts = None
+    if args.kv_layout:
+        kv_layouts = (("dense", "paged") if args.kv_layout == "all"
+                      else tuple(args.kv_layout.split(",")))
     failures = 0
     for name, module in BENCHES:
         if args.only and args.only != name:
@@ -57,6 +66,8 @@ def main() -> None:
                 kw.update(n_queries=4, max_new=32)
             if backends is not None and "backends" in varnames:
                 kw["backends"] = backends
+            if kv_layouts is not None and "kv_layouts" in varnames:
+                kw["kv_layouts"] = kv_layouts
             mod.run(**kw)
         except Exception:  # noqa: BLE001
             failures += 1

@@ -48,6 +48,22 @@ def main() -> None:
     assert out_pallas.tokens == out.tokens, "backend changed an output!"
     print("pallas backend ✓ — same tokens through the blocked kernels")
 
+    # paged KV cache: a block pool sized to the actual footprint
+    # (prompt + budget + tree width) instead of max_seq_len per lane —
+    # outputs stay bit-identical (DESIGN.md §Paged KV cache)
+    from repro.serving.block_allocator import demand_blocks
+    blocks = demand_blocks(len(prompt), 64, la.slots, cfg.max_seq_len, 64)
+    fns_paged = make_session_fns(cfg, params, slots=la.slots,
+                                 kv_layout="paged", block_size=64,
+                                 n_blocks=1 + blocks)
+    engine_paged = LookaheadEngine(fns_paged, la)
+    engine_paged.warmup([ref])
+    out_paged = engine_paged.generate(prompt, max_new_tokens=64)
+    assert out_paged.tokens == out.tokens, "kv layout changed an output!"
+    dense_rows, paged_rows = cfg.max_seq_len, blocks * 64
+    print(f"paged kv cache ✓ — same tokens from {paged_rows} cache rows "
+          f"instead of {dense_rows}")
+
 
 if __name__ == "__main__":
     main()

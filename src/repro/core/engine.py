@@ -100,6 +100,13 @@ class LookaheadEngine:
             # near-max-length prompts: the scheduler refuses admission
             # (no room for a tree step); the lock-step loop degrades
             # gracefully to a 1-token result instead
+            if getattr(self.fns, "kv_layout", "dense") == "paged":
+                raise ValueError(
+                    f"prompts padded to {prefill_len} leave no room for a "
+                    f"{self.tree_width}-slot tree step within max_seq_len="
+                    f"{self.fns.max_seq_len}, and the paged layout has no "
+                    "lock-step fallback — shorten the prompt, raise "
+                    "max_seq_len, or use kv_layout='dense'")
             return self.generate_batch_lockstep(prompts, max_new_tokens)
         from repro.serving.scheduler import ContinuousScheduler
         budgets = _budgets(max_new_tokens, len(prompts))
@@ -119,6 +126,11 @@ class LookaheadEngine:
         """Legacy loop: all requests step together; finished requests idle in
         their slot until the slowest request of the batch drains."""
         cfg, fns = self.config, self.fns
+        if getattr(fns, "kv_layout", "dense") == "paged":
+            raise ValueError(
+                "the lock-step loop drives the dense KV layout only; paged "
+                "sessions are served by ContinuousScheduler (which owns the "
+                "block allocator)")
         B = len(prompts)
         W = self.tree_width
         budgets = _budgets(max_new_tokens, B)

@@ -50,6 +50,14 @@ class StepFns:
     reset_slot(cache, lane) -> cache                — zero a freed lane
     prefill_len: fixed prompt pad length (compile prefill once); None keeps
         the legacy pad-to-batch-max behaviour.
+
+    Paged-KV extensions (kv_layout == "paged"; DESIGN.md §Paged KV cache):
+    the cache dict additionally carries per-lane ``block_tables`` the
+    scheduler maintains through a host-side BlockAllocator; ``prefill``
+    takes them as a third argument (the cache does not exist yet at cohort
+    admission), and lane-keyed ``reset_slot`` is replaced by the
+    block-keyed ``reset_blocks(cache, block_ids) -> cache`` (scrubbing by
+    lane after a table was reused would destroy the next request's KV).
     """
     prefill: Callable
     tree_step: Callable
@@ -61,11 +69,22 @@ class StepFns:
     prefill_into_slot: Optional[Callable] = None
     reset_slot: Optional[Callable] = None
     prefill_len: Optional[int] = None
+    kv_layout: str = "dense"
+    block_size: int = 0               # paged: KV rows per block
+    n_blocks: Optional[int] = None    # paged: pool size (None = dense-equiv)
+    reset_blocks: Optional[Callable] = None
 
     @property
     def supports_slot_serving(self) -> bool:
         return (self.prefill_into_slot is not None
                 and self.init_cache is not None)
+
+    @property
+    def blocks_per_lane(self) -> int:
+        """Block-table width for the paged layout (0 when dense)."""
+        if self.kv_layout != "paged" or not self.block_size:
+            return 0
+        return -(-self.max_seq_len // self.block_size)
 
 
 @dataclass

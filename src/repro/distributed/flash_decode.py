@@ -178,5 +178,14 @@ class FlashDecodeBackend:
         return make_flash_attend(mesh, cache_lens, tree_mask,
                                  score_f32=cfg.attn_score_f32)
 
+    def make_paged_tree_attend(self, cfg, block_tables, cache_lens,
+                               tree_mask):
+        """The paged pool is lane-agnostic, so the sequence-parallel
+        shard_map layout does not apply; delegate to the dense gather path
+        (identical semantics, no mesh)."""
+        from repro.models.attention import get_backend
+        return get_backend("dense").make_paged_tree_attend(
+            cfg, block_tables, cache_lens, tree_mask)
+
 
 __all__ = ["make_flash_attend", "cache_partition_spec", "FlashDecodeBackend"]

@@ -1,1 +1,2 @@
 from .ops import *  # noqa
+from .paged import *  # noqa

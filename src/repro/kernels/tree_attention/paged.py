@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: block-table (paged) tree-verification attention.
+
+Same online-softmax structure as ``tree_attention.py``, but the KV cache is
+the paged block pool ``(n_blocks, block_size, K, dh)`` shared by every lane:
+the grid's innermost axis walks a lane's *logical* blocks and a scalar-
+prefetched block table translates each step to the physical block the DMA
+streams HBM→VMEM.  Decode therefore never materializes a contiguous
+per-lane cache — the gather that the dense paged backend does with
+``jnp.take`` happens inside the DMA engine's address computation instead
+(PagedAttention, Kwon et al. SOSP 2023; flash-attention block-table decode).
+
+Grid = (B, K, blocks_per_lane); the block axis is innermost/sequential and
+carries (m, l, acc) scratch in VMEM.  Unallocated table entries point at the
+reserved NULL block 0 — their rows are masked out, so the wasted DMA is the
+only cost of fixed shapes (I2).  On TPU ``block_size`` must be a sublane
+multiple (8 for f32); interpret mode (any non-TPU platform) takes any size.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ops import _pad_to, default_interpret
+from .tree_attention import _kernel, _vmem
+
+
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, g, n_blocks):
+    # the block table only steers the index maps; the body never reads it
+    del bt_ref
+    _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr,
+            scale=scale, g=g, n_blocks=n_blocks)
+
+
+def paged_tree_attention_grouped(q: jax.Array, k: jax.Array, v: jax.Array,
+                                 block_tables: jax.Array, mask: jax.Array, *,
+                                 interpret: bool = False) -> jax.Array:
+    """q (B, K, TG, dh); k/v (n_blocks, block_size, K, dh);
+    block_tables (B, blocks_per_lane) int32; mask (B, T, S_virtual) with
+    S_virtual = blocks_per_lane * block_size and T = TG // G.
+    Returns (B, K, TG, dh).  dh should be a multiple of 128 (pad upstream).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, K, TG, dh = q.shape
+    n_blocks, bs = k.shape[0], k.shape[1]
+    bpl = block_tables.shape[1]
+    T = mask.shape[1]
+    assert mask.shape[2] == bpl * bs, (mask.shape, bpl, bs)
+    g = TG // T
+    grid = (B, K, bpl)
+    kernel = functools.partial(_paged_kernel, scale=dh ** -0.5, g=g,
+                               n_blocks=bpl)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, TG, dh), lambda b, h, j, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda b, h, j, bt: (bt[b, j], 0,
+                                                              h, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda b, h, j, bt: (bt[b, j], 0,
+                                                              h, 0)),
+            pl.BlockSpec((1, T, bs), lambda b, h, j, bt: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, TG, dh),
+                               lambda b, h, j, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            _vmem((TG, 128), jnp.float32),
+            _vmem((TG, 128), jnp.float32),
+            _vmem((TG, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, TG, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, q, k, v, mask)
+
+
+def paged_tree_attention(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, block_tables: jax.Array,
+                         mask: jax.Array, *,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Public layout wrapper (mirrors ``ops.tree_attention``).
+
+    q (B, T, H, dh); k/v (n_blocks, block_size, K, dh);
+    block_tables (B, blocks_per_lane); mask (B, T, blocks_per_lane *
+    block_size) → (B, T, H, dh)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_tree_attention(q, k_cache, v_cache, block_tables, mask,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_tree_attention(q, k_cache, v_cache, block_tables, mask, *,
+                          interpret: bool):
+    B, T, H, dh = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, K, T * G, dh)
+    dh_p = -(-dh // 128) * 128
+    qg = _pad_to(qg, 3, 128)
+    kp = _pad_to(k_cache, 3, 128)
+    vp = _pad_to(v_cache, 3, 128)
+    # scale uses padded dh inside the kernel; compensate so logits match
+    scale_fix = (dh_p / dh) ** 0.5
+    out = paged_tree_attention_grouped(qg * scale_fix, kp, vp,
+                                       block_tables.astype(jnp.int32), mask,
+                                       interpret=interpret)
+    out = out[..., :dh].reshape(B, K, T, G, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, T, H, dh)
+
+
+__all__ = ["paged_tree_attention", "paged_tree_attention_grouped"]

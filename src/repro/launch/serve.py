@@ -68,7 +68,21 @@ def main() -> None:
     ap.add_argument("--decode-backend", default=None,
                     choices=attn_backends.available_backends(),
                     help="tree-decode-phase attention backend override")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="KV-cache layout: dense (lanes, max_seq_len) rows "
+                         "or a paged block pool with per-lane block tables")
+    ap.add_argument("--block-size", type=int, default=64,
+                    help="paged layout: KV rows per block")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged layout: total pool blocks (0 = size the "
+                         "pool to the workload's worst-case footprint; the "
+                         "dense-equivalent is lanes*ceil(max_seq_len/"
+                         "block_size)+1)")
     args = ap.parse_args()
+    if args.kv_layout == "paged" and args.mode == "lockstep":
+        raise SystemExit("--kv-layout paged requires --mode continuous "
+                         "(the scheduler owns the block allocator)")
 
     mod = cfgreg.get_arch(args.arch)
     cfg = mod.smoke_config() if args.smoke else mod.full_config()
@@ -88,13 +102,24 @@ def main() -> None:
     la = LookaheadConfig(decoding_length=args.decoding_length,
                          branch_length=args.branch_length,
                          sample=args.sample, temperature=args.temperature)
+    n_blocks = None
+    if args.kv_layout == "paged":
+        # size the pool to the workload's worst-case footprint instead of
+        # lanes * max_seq_len (the paged memory win), with the SAME formula
+        # the scheduler admits by
+        from repro.serving.block_allocator import worst_case_pool_blocks
+        n_blocks = args.kv_blocks or worst_case_pool_blocks(
+            args.lanes, args.prefill_len, args.max_new, la.slots,
+            cfg.max_seq_len, args.block_size)
     fns = make_session_fns(cfg, params, sample=args.sample,
                            temperature=args.temperature,
                            base_key=jax.random.key(0), slots=la.slots,
                            prefill_len=args.prefill_len,
                            backend=args.backend,
                            prefill_backend=args.prefill_backend,
-                           decode_backend=args.decode_backend)
+                           decode_backend=args.decode_backend,
+                           kv_layout=args.kv_layout,
+                           block_size=args.block_size, n_blocks=n_blocks)
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
     prompt_cap = min(96, args.prefill_len)
     reqs = [corpus.sample()[0][:prompt_cap] for _ in range(args.requests)]
@@ -150,6 +175,12 @@ def main() -> None:
     print(f"continuous: {tok} tokens / {len(results)} requests "
           f"({st.decode_steps} device steps, EDL {tok/max(steps,1):.2f}, "
           f"occupancy {st.occupancy:.2f}) in {dt:.1f}s -> {tok/dt:.1f} tok/s")
+    if sched.cache is not None:
+        cache_mb = sum(v.nbytes for v in sched.cache.values()) / 2**20
+        extra = (f", peak {st.peak_blocks} blocks, "
+                 f"{st.block_waits} block-waits"
+                 if args.kv_layout == "paged" else "")
+        print(f"kv cache [{args.kv_layout}]: {cache_mb:.1f} MiB{extra}")
     print(f"latency  p50 {_pct(lat, 50)*1e3:7.1f} ms   "
           f"p95 {_pct(lat, 95)*1e3:7.1f} ms   "
           f"p99 {_pct(lat, 99)*1e3:7.1f} ms")

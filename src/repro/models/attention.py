@@ -65,6 +65,22 @@ def scatter_kv(k_cache: jax.Array, v_cache: jax.Array, cache_lens: jax.Array,
     return k_cache, v_cache
 
 
+def scatter_kv_paged(k_cache: jax.Array, v_cache: jax.Array,
+                     slot_rows: jax.Array, k: jax.Array, v: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Paged twin of ``scatter_kv``: write the (B, T) draft-slot KV rows at
+    precomputed physical rows of the (n_blocks, block_size, K, dh) pool.
+    Rows are distinct across lanes (block ownership is exclusive); only
+    NULL-block garbage of idle lanes ever collides."""
+    nb, bs, K, dh = k_cache.shape
+    flat = slot_rows.reshape(-1)
+    kf = k_cache.reshape(nb * bs, K, dh)
+    vf = v_cache.reshape(nb * bs, K, dh)
+    kf = kf.at[flat].set(k.reshape(-1, K, dh).astype(k_cache.dtype))
+    vf = vf.at[flat].set(v.reshape(-1, K, dh).astype(v_cache.dtype))
+    return kf.reshape(k_cache.shape), vf.reshape(v_cache.shape)
+
+
 def build_full_tree_mask(cache_lens: jax.Array, tree_mask: jax.Array,
                          S_max: int) -> jax.Array:
     """(B, T, T) ancestor-closure → (B, T, S_max): past ∨ tree block."""
@@ -114,6 +130,52 @@ class AttentionBackend:
 
         return attend
 
+    def _paged_geometry(self, cfg, block_tables: jax.Array,
+                        cache_lens: jax.Array, tree_mask: jax.Array):
+        """Shared paged-decode precompute: the (B, T, S_virtual) full mask
+        plus the physical rows for the draft-slot scatter and (for the
+        gather path) every logical position of every lane."""
+        from repro.models.transformer import paged_row_index
+        bs = cfg.kv_block_size
+        B, T = tree_mask.shape[:2]
+        S_virtual = block_tables.shape[1] * bs
+        full_mask = build_full_tree_mask(cache_lens, tree_mask, S_virtual)
+        slots = cache_lens[:, None] + jnp.arange(T)[None, :]
+        slot_rows = paged_row_index(block_tables, slots, bs)
+        all_pos = jnp.broadcast_to(jnp.arange(S_virtual)[None, :],
+                                   (B, S_virtual))
+        all_rows = paged_row_index(block_tables, all_pos, bs)
+        return full_mask, slot_rows, all_rows, S_virtual
+
+    def make_paged_tree_attend(self, cfg, block_tables: jax.Array,
+                               cache_lens: jax.Array, tree_mask: jax.Array
+                               ) -> Callable:
+        """Tree-decode closure over the paged cache — per-layer caches are
+        the (n_blocks, block_size, K, dh) block pool.  Reference semantics:
+        gather each lane's blocks back into a contiguous (B, S_virtual)
+        window via ``jnp.take`` and reuse the dense math (parity oracle for
+        the streaming kernel; positions beyond a lane's coverage resolve to
+        NULL-block garbage and are masked)."""
+        full_mask, slot_rows, all_rows, S_virtual = self._paged_geometry(
+            cfg, block_tables, cache_lens, tree_mask)
+        B = tree_mask.shape[0]
+
+        def attend(q, k, v, k_cache, v_cache):
+            q = constrain(q, "batch", None, "heads", None)
+            k_cache, v_cache = scatter_kv_paged(k_cache, v_cache, slot_rows,
+                                                k, v)
+            nb, bs_, K, dh = k_cache.shape
+            flat = all_rows.reshape(-1)
+            kg = jnp.take(k_cache.reshape(nb * bs_, K, dh), flat, axis=0
+                          ).reshape(B, S_virtual, K, dh)
+            vg = jnp.take(v_cache.reshape(nb * bs_, K, dh), flat, axis=0
+                          ).reshape(B, S_virtual, K, dh)
+            out = gqa_attention(q, kg, vg, full_mask,
+                                softmax_in_f32=cfg.attn_score_f32)
+            return out, k_cache, v_cache
+
+        return attend
+
 
 class PallasBackend(AttentionBackend):
     """Blocked Pallas kernels for both phases.
@@ -139,6 +201,25 @@ class PallasBackend(AttentionBackend):
         def attend(q, k, v, k_cache, v_cache):
             k_cache, v_cache = scatter_kv(k_cache, v_cache, cache_lens, k, v)
             out = tree_attention(q, k_cache, v_cache, full_mask)
+            return out, k_cache, v_cache
+
+        return attend
+
+    def make_paged_tree_attend(self, cfg, block_tables, cache_lens,
+                               tree_mask):
+        """Streaming paged decode: the kernel walks each lane's logical
+        blocks and a scalar-prefetched block table steers the DMA to the
+        physical block — no contiguous per-lane cache is ever materialized
+        (the jnp.take of the dense path disappears into addressing)."""
+        from repro.kernels.tree_attention.paged import paged_tree_attention
+        full_mask, slot_rows, _, _ = self._paged_geometry(
+            cfg, block_tables, cache_lens, tree_mask)
+
+        def attend(q, k, v, k_cache, v_cache):
+            k_cache, v_cache = scatter_kv_paged(k_cache, v_cache, slot_rows,
+                                                k, v)
+            out = paged_tree_attention(q, k_cache, v_cache, block_tables,
+                                       full_mask)
             return out, k_cache, v_cache
 
         return attend
@@ -175,4 +256,5 @@ register_backend(FlashDecodeBackend())
 
 __all__ = ["AttentionBackend", "PallasBackend", "register_backend",
            "get_backend", "available_backends", "scatter_kv",
-           "build_full_tree_mask", "dense_prefill_attention"]
+           "scatter_kv_paged", "build_full_tree_mask",
+           "dense_prefill_attention"]

@@ -68,6 +68,11 @@ class TransformerConfig:
     prefill_backend: str = "dense"
     decode_backend: str = "dense"
     attn_score_f32: bool = True             # False: bf16 score temps (perf)
+    # KV-cache layout: "dense" = (lanes, max_seq_len) rows per lane;
+    # "paged" = a shared pool of (n_blocks, kv_block_size) rows indexed by
+    # per-lane block tables (vLLM-style; block 0 reserved as NULL/trash)
+    kv_layout: str = "dense"
+    kv_block_size: int = 64
 
     @property
     def dh(self) -> int:
@@ -397,11 +402,57 @@ def init_cache(cfg: TransformerConfig, batch: int,
 
 
 def cache_logical_axes(cfg: TransformerConfig) -> Dict[str, Tuple]:
+    if cfg.kv_layout == "paged":
+        # block pool is lane-agnostic: only the head axis is shardable
+        return {"k": (None, None, None, "kv_heads", None),
+                "v": (None, None, None, "kv_heads", None),
+                "block_tables": (None, None)}
     if cfg.decode_backend == "flash_decode":
         return {"k": (None, None, "kv_seq", "kv_heads", None),
                 "v": (None, None, "kv_seq", "kv_heads", None)}
     return {"k": (None, "batch", None, "kv_heads", None),
             "v": (None, "batch", None, "kv_heads", None)}
+
+
+# ------------------------------------------------------------ paged KV cache
+def blocks_per_lane(cfg: TransformerConfig) -> int:
+    """Block-table width: blocks covering max_seq_len logical positions."""
+    return -(-cfg.max_seq_len // cfg.kv_block_size)
+
+
+def init_paged_cache(cfg: TransformerConfig, lanes: int,
+                     n_blocks: Optional[int] = None,
+                     dtype: Optional[jnp.dtype] = None
+                     ) -> Dict[str, jax.Array]:
+    """Block-pool KV cache: k/v (L, n_blocks, block_size, K, dh) plus the
+    per-lane block tables (lanes, blocks_per_lane) int32.
+
+    ``n_blocks`` defaults to the dense-equivalent worst case (every lane can
+    hold max_seq_len rows) plus the reserved NULL block 0; serving stacks
+    pass a smaller pool sized to the actual workload — that is the paged
+    layout's memory win.  Table entries start at 0 (the NULL block), where
+    never-attended scatters land harmlessly.
+    """
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    bs, bpl = cfg.kv_block_size, blocks_per_lane(cfg)
+    nb = int(n_blocks) if n_blocks else 1 + lanes * bpl
+    dt = dtype or cfg.adtype
+    return {"k": jnp.zeros((L, nb, bs, K, dh), dt),
+            "v": jnp.zeros((L, nb, bs, K, dh), dt),
+            "block_tables": jnp.zeros((lanes, bpl), jnp.int32)}
+
+
+def paged_row_index(block_tables: jax.Array, positions: jax.Array,
+                    block_size: int) -> jax.Array:
+    """Logical positions -> physical flat cache rows through block tables.
+
+    block_tables (B, blocks_per_lane) int32; positions (B, N) logical token
+    positions.  Returns (B, N) rows into the (n_blocks*block_size, ...) flat
+    view.  Positions past a lane's allocated coverage resolve through table
+    entry 0 to the NULL block (garbage rows, never attended)."""
+    blk = jnp.clip(positions // block_size, 0, block_tables.shape[-1] - 1)
+    phys = jnp.take_along_axis(block_tables, blk.astype(jnp.int32), axis=-1)
+    return phys * block_size + positions % block_size
 
 
 def prefill(cfg: TransformerConfig, params: Params, tokens: jax.Array,
@@ -476,6 +527,135 @@ def prefill_into_slot(cfg: TransformerConfig, params: Params,
     return cache, _unembed(cfg, params, h_last)
 
 
+def _scatter_paged_rows(cache: Dict[str, jax.Array], rows: jax.Array,
+                        k_new: jax.Array, v_new: jax.Array
+                        ) -> Dict[str, jax.Array]:
+    """Write per-layer KV (L, B, N, K, dh) at flat physical ``rows`` (B, N)
+    of the paged pool.  Duplicate rows only ever arise on NULL-block
+    garbage, where any write order is fine."""
+    k, v = cache["k"], cache["v"]
+    L, nb, bs, K, dh = k.shape
+    flat = rows.reshape(-1)
+    kf = k.reshape(L, nb * bs, K, dh)
+    vf = v.reshape(L, nb * bs, K, dh)
+    kf = kf.at[:, flat].set(k_new.reshape(L, -1, K, dh).astype(k.dtype))
+    vf = vf.at[:, flat].set(v_new.reshape(L, -1, K, dh).astype(v.dtype))
+    return {"k": kf.reshape(k.shape), "v": vf.reshape(v.shape),
+            "block_tables": cache["block_tables"]}
+
+
+def prefill_paged(cfg: TransformerConfig, params: Params, tokens: jax.Array,
+                  lens: jax.Array, cache: Dict[str, jax.Array]
+                  ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Batched causal prefill into a paged cache: row p of lane b lands at
+    the physical row its block table maps p to.  Rows past a lane's
+    allocated coverage (prompt padding, lanes without a request) resolve to
+    the NULL block — garbage, never attended (I3)."""
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens)
+    h = constrain(h, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    len_mask = positions < lens[:, None]
+    h, kv = _scan_layers(cfg, params, h, _layer_self, extra_xs=(),
+                         extra_args=(positions, len_mask))
+    rows = paged_row_index(cache["block_tables"], positions,
+                           cfg.kv_block_size)
+    cache = _scatter_paged_rows(cache, rows, kv[0], kv[1])
+    h_last = jnp.take_along_axis(
+        h, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return cache, _unembed(cfg, params, h_last)
+
+
+def prefill_into_slot_paged(cfg: TransformerConfig, params: Params,
+                            cache: Dict[str, jax.Array], slot: jax.Array,
+                            tokens: jax.Array, lens: jax.Array
+                            ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Paged twin of ``prefill_into_slot``: one request's KV scatters through
+    lane ``slot``'s block table; every other lane's blocks are untouched
+    (block ownership is exclusive, so no start-index arithmetic needed)."""
+    B, S = tokens.shape
+    assert B == 1, "prefill_into_slot admits one request at a time"
+    h = _embed(cfg, params, tokens)
+    h = constrain(h, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    len_mask = positions < lens[:, None]
+    h, kv = _scan_layers(cfg, params, h, _layer_self, extra_xs=(),
+                         extra_args=(positions, len_mask))
+    bt_row = jax.lax.dynamic_index_in_dim(
+        cache["block_tables"], jnp.asarray(slot, jnp.int32), axis=0)  # (1,bpl)
+    rows = paged_row_index(bt_row, positions, cfg.kv_block_size)
+    cache = _scatter_paged_rows(cache, rows, kv[0], kv[1])
+    h_last = jnp.take_along_axis(
+        h, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return cache, _unembed(cfg, params, h_last)
+
+
+def tree_step_paged(cfg: TransformerConfig, params: Params,
+                    cache: Dict[str, jax.Array], cache_lens: jax.Array,
+                    tokens: jax.Array, positions: jax.Array,
+                    tree_mask: jax.Array
+                    ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Lookahead VA forward over the paged cache: the decode backend's
+    ``make_paged_tree_attend`` scatters draft-slot KV through the block
+    tables and attends against the blocks (dense: gather via jnp.take;
+    pallas: the block-table streaming kernel)."""
+    bt = cache["block_tables"]
+    backend = attn_backends.get_backend(cfg.decode_backend)
+    attend = backend.make_paged_tree_attend(cfg, bt, cache_lens, tree_mask)
+
+    h = _embed(cfg, params, tokens)
+
+    def layer(cfg_, lp, h_, k_c, v_c):
+        return _layer_tree(cfg_, lp, h_, positions, k_c, v_c, attend)
+
+    h, kv = _scan_layers(cfg, params, h, layer,
+                         extra_xs=(cache["k"], cache["v"]), extra_args=(),
+                         alias_ys_to_xs=True)
+    new_cache = {"k": kv[0], "v": kv[1], "block_tables": bt}
+    return new_cache, _unembed(cfg, params, h)
+
+
+def commit_paged_cache(cfg: TransformerConfig, cache: Dict[str, jax.Array],
+                       cache_lens: jax.Array, gather_idx: jax.Array,
+                       n_accept: jax.Array
+                       ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Paged twin of ``commit_cache``: logical src/dst positions resolve
+    through the block tables before the gather/scatter."""
+    k, v, bt = cache["k"], cache["v"], cache["block_tables"]
+    L, nb, bs, K, dh = k.shape
+    B, T = gather_idx.shape
+    src = cache_lens[:, None] + gather_idx                         # (B, T)
+    dst = cache_lens[:, None] + jnp.arange(T)[None, :]
+    src_rows = paged_row_index(bt, src, cfg.kv_block_size).reshape(-1)
+    dst_rows = paged_row_index(bt, dst, cfg.kv_block_size).reshape(-1)
+    kf = k.reshape(L, nb * bs, K, dh)
+    vf = v.reshape(L, nb * bs, K, dh)
+    kg = kf[:, src_rows]                                    # (L, B*T, K, dh)
+    vg = vf[:, src_rows]
+    kf = kf.at[:, dst_rows].set(kg)
+    vf = vf.at[:, dst_rows].set(vg)
+    return {"k": kf.reshape(k.shape), "v": vf.reshape(v.shape),
+            "block_tables": bt}, cache_lens + n_accept
+
+
+def reset_blocks(cache: Dict[str, jax.Array], block_ids: jax.Array
+                 ) -> Dict[str, jax.Array]:
+    """Zero the given physical blocks of a paged cache (hygiene scrub).
+
+    ``block_ids`` (N,) int32 — pad with 0: scrubbing the NULL block is
+    harmless.  MUST be called on blocks at free time, BEFORE the allocator
+    can hand them to a newly admitted request (a lane- or table-keyed scrub
+    after re-allocation would destroy the new request's KV)."""
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+    out = dict(cache)
+    for name in ("k", "v"):
+        buf = cache[name]
+        zero = jnp.zeros((buf.shape[0], block_ids.shape[0]) + buf.shape[2:],
+                         buf.dtype)
+        out[name] = buf.at[:, block_ids].set(zero)
+    return out
+
+
 def reset_slot(cache: Dict[str, jax.Array], slot: jax.Array
                ) -> Dict[str, jax.Array]:
     """Zero one batch lane of the KV cache.  Hygiene only: correctness never
@@ -541,4 +721,6 @@ def commit_cache(cache: Dict[str, jax.Array], cache_lens: jax.Array,
 __all__ = ["TransformerConfig", "Params", "init_params", "param_logical_axes",
            "train_logits", "lm_loss", "init_cache", "cache_logical_axes",
            "prefill", "prefill_into_slot", "reset_slot", "tree_step",
-           "commit_cache"]
+           "commit_cache", "blocks_per_lane", "init_paged_cache",
+           "paged_row_index", "prefill_paged", "prefill_into_slot_paged",
+           "tree_step_paged", "commit_paged_cache", "reset_blocks"]

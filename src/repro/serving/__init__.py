@@ -1,6 +1,7 @@
+from .block_allocator import BlockAllocator, NULL_BLOCK
 from .session import make_session_fns
 from .sampler import choose_tokens
 from .scheduler import ContinuousScheduler, SchedulerStats
 
 __all__ = ["make_session_fns", "choose_tokens", "ContinuousScheduler",
-           "SchedulerStats"]
+           "SchedulerStats", "BlockAllocator", "NULL_BLOCK"]

@@ -1,0 +1,188 @@
+"""Host-side block allocator for the paged KV cache (vLLM-style).
+
+The device cache is a pool of fixed-size blocks ``(n_blocks, block_size, K,
+dh)`` per layer; each request owns an ordered list of physical block ids (its
+*block table*) mapping logical token positions to cache rows:
+
+    phys_row(p) = table[p // block_size] * block_size + p % block_size
+
+Physical block 0 is reserved as the NULL/trash block: unallocated table
+entries point at it, and device scatters of never-attended rows (prompt pad
+rows, idle-lane draft slots) land there harmlessly.  The allocator therefore
+hands out ids from ``[1, n_blocks)`` only.
+
+Admission is *reservation-based* so serving stays preemption-free: a request
+reserves its worst-case block demand up front (``can_admit``/``alloc``) but
+takes physical blocks incrementally (``alloc`` then ``extend`` as the
+sequence grows).  Because every physical block is interchangeable, the
+reservation invariant
+
+    sum(reserved demand over live requests) <= capacity
+
+guarantees that ``extend`` can never fail mid-flight — a request admitted is
+a request that finishes.  Requests whose demand cannot currently be reserved
+wait in the scheduler queue (backpressure); since live requests retire in
+finite time and ``free`` returns both blocks and reservation, the queue
+always drains (no deadlock) as long as any single request's demand fits the
+pool — which ``alloc`` enforces up front.
+
+Fragmentation in this design is purely *internal* (a request's last block is
+partially used); ``frag_rows``/``frag_rows_total`` account for it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+NULL_BLOCK = 0
+
+
+def demand_blocks(prompt_len: int, max_new: int, width: int,
+                  max_seq_len: int, block_size: int) -> int:
+    """Worst-case block demand of one request: cache rows for its prompt
+    plus its full token budget plus one tree width of draft slots, capped
+    at max_seq_len (the scheduler's overflow-retirement bound).  This is
+    THE admission/reservation formula — pool-sizing callers must use it so
+    sizing and admission can never drift apart."""
+    need = min(prompt_len + max_new + width, max_seq_len)
+    return -(-max(int(need), 1) // block_size)
+
+
+def worst_case_pool_blocks(lanes: int, prompt_len: int, max_new: int,
+                           width: int, max_seq_len: int,
+                           block_size: int) -> int:
+    """Pool size letting ``lanes`` worst-case requests run concurrently,
+    plus the reserved NULL block."""
+    return 1 + lanes * demand_blocks(prompt_len, max_new, width,
+                                     max_seq_len, block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over ``n_blocks`` KV-cache blocks of
+    ``block_size`` token rows each (block 0 reserved as NULL)."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError(f"n_blocks={n_blocks}: need >= 2 (block 0 is "
+                             "the reserved NULL block)")
+        if block_size < 1:
+            raise ValueError(f"block_size={block_size}")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        # LIFO free list: freshly freed blocks are re-used first, which keeps
+        # the working set hot and makes free-then-alloc reuse easy to test.
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+        self._reserved: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------ state
+    @property
+    def capacity(self) -> int:
+        """Usable blocks (total minus the NULL block)."""
+        return self.n_blocks - 1
+
+    @property
+    def n_free(self) -> int:
+        """Physically free blocks right now."""
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def n_reserved(self) -> int:
+        """Blocks promised to live requests (>= n_allocated)."""
+        return sum(self._reserved.values())
+
+    @property
+    def available(self) -> int:
+        """Blocks still reservable by new admissions."""
+        return self.capacity - self.n_reserved
+
+    def table(self, rid: int) -> List[int]:
+        return list(self._tables[rid])
+
+    def n_blocks_of(self, rid: int) -> int:
+        return len(self._tables[rid])
+
+    def reserved_of(self, rid: int) -> int:
+        return self._reserved[rid]
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        """ceil(n_tokens / block_size)."""
+        return -(-max(int(n_tokens), 0) // self.block_size)
+
+    # ------------------------------------------------------------- life cycle
+    def can_admit(self, demand_blocks: int) -> bool:
+        """True iff a request with this worst-case demand can be admitted
+        without ever starving a live request's extend."""
+        return 0 < demand_blocks <= self.available
+
+    def alloc(self, rid: int, n_initial: int, *,
+              reserve: Optional[int] = None) -> List[int]:
+        """Admit ``rid``: reserve its worst-case demand and hand out the
+        first ``n_initial`` physical blocks."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already has a block table")
+        reserve = n_initial if reserve is None else int(reserve)
+        if reserve < n_initial:
+            raise ValueError(f"reserve={reserve} < n_initial={n_initial}")
+        if reserve > self.capacity:
+            raise ValueError(
+                f"request {rid} demands {reserve} blocks; pool capacity is "
+                f"{self.capacity} (n_blocks={self.n_blocks}, "
+                f"block_size={self.block_size})")
+        if not self.can_admit(reserve):
+            raise RuntimeError(
+                f"cannot admit request {rid}: demand {reserve} blocks, "
+                f"available {self.available} (backpressure)")
+        self._reserved[rid] = reserve
+        self._tables[rid] = []
+        return self.extend(rid, n_initial)
+
+    def extend(self, rid: int, n_more: int) -> List[int]:
+        """Grow ``rid``'s table by ``n_more`` physical blocks.  Never fails
+        for an admitted request staying within its reservation (the
+        reservation invariant keeps that many blocks physically free)."""
+        table = self._tables.get(rid)
+        if table is None:
+            raise KeyError(f"unknown request {rid}")
+        if n_more < 0:
+            raise ValueError(f"n_more={n_more}")
+        if len(table) + n_more > self._reserved[rid]:
+            raise RuntimeError(
+                f"request {rid}: extend to {len(table) + n_more} blocks "
+                f"exceeds its reservation of {self._reserved[rid]}")
+        assert n_more <= len(self._free), "reservation invariant violated"
+        new = [self._free.pop() for _ in range(n_more)]
+        table.extend(new)
+        return new
+
+    def free(self, rid: int) -> List[int]:
+        """Retire ``rid``: return its physical blocks to the free list and
+        release its reservation.  Returns the freed ids so the caller can
+        scrub them BEFORE they are re-allocated (reset-slot hygiene: once a
+        freed block is handed to a new request, zeroing it would destroy the
+        new request's KV)."""
+        table = self._tables.pop(rid, None)
+        if table is None:
+            raise KeyError(f"unknown request {rid}")
+        del self._reserved[rid]
+        self._free.extend(table)
+        return table
+
+    # ---------------------------------------------------------- fragmentation
+    def frag_rows(self, rid: int, used_rows: int) -> int:
+        """Internal fragmentation of one request: allocated-but-unused token
+        rows (its partially-filled tail block plus any pre-extended ones)."""
+        return len(self._tables[rid]) * self.block_size - int(used_rows)
+
+    def frag_rows_total(self, used_rows: Dict[int, int]) -> int:
+        """Aggregate internal fragmentation over live requests; ``used_rows``
+        maps rid -> committed token rows."""
+        return sum(self.frag_rows(rid, used_rows.get(rid, 0))
+                   for rid in self._tables)
+
+
+__all__ = ["BlockAllocator", "NULL_BLOCK", "demand_blocks",
+           "worst_case_pool_blocks"]

@@ -19,8 +19,17 @@ admission queue:
   * a request leaves its lane on EOS / budget / cache-overflow and the next
     queued request is admitted on the following scheduler iteration.  Stale
     KV rows of a freed lane are left in place — they are never attended
-    (invariant I3); ``StepFns.reset_slot`` exists to scrub them for
+    (invariant I3); ``scrub_freed=True`` zeroes them at free time for
     debugging/inspection, not for correctness.
+
+With a paged StepFns (``kv_layout == "paged"``; DESIGN.md §Paged KV cache)
+the scheduler additionally owns a ``BlockAllocator``: admission requires a
+free lane AND a reservable worst-case block demand (otherwise the FIFO
+queue waits — preemption-free backpressure), block tables ride inside the
+cache dict and are extended after each commit to cover the next tree step,
+and a retiring request's blocks are freed — and, under ``scrub_freed``,
+zeroed by physical id BEFORE they can be re-allocated (lane-keyed scrubbing
+after reuse would destroy the next request's KV).
 
 Slot lifecycle (DESIGN.md §Scheduler slot lifecycle):
 
@@ -49,6 +58,7 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.request import (RequestResult, RequestState, StepFns,
@@ -57,6 +67,7 @@ from repro.core.request import (RequestResult, RequestState, StepFns,
 from repro.core.strategies import LookaheadConfig
 from repro.core.trie import TrieTree
 from repro.core.verify import verify_accept_batch
+from repro.serving.block_allocator import BlockAllocator, demand_blocks
 
 
 class SchedulerStats:
@@ -69,6 +80,8 @@ class SchedulerStats:
         self.active_lane_steps = 0
         self.admitted = 0
         self.finished = 0
+        self.block_waits = 0     # admissions deferred for blocks, not lanes
+        self.peak_blocks = 0     # max physical blocks allocated at once
 
     @property
     def occupancy(self) -> float:
@@ -86,7 +99,7 @@ class ContinuousScheduler:
     def __init__(self, fns: StepFns, config: LookaheadConfig, *,
                  lanes: int, trie: Optional[TrieTree] = None,
                  eos_id: int = -1, prefill_len: Optional[int] = None,
-                 rid_start: int = 0):
+                 rid_start: int = 0, scrub_freed: bool = False):
         if not fns.supports_slot_serving:
             raise ValueError("StepFns lack prefill_into_slot/init_cache; "
                              "continuous batching needs per-slot admission")
@@ -94,6 +107,7 @@ class ContinuousScheduler:
         self.config = config
         self.eos_id = eos_id
         self.lanes = int(lanes)
+        self.scrub_freed = bool(scrub_freed)
         self.prefill_len = int(prefill_len or fns.prefill_len or 0)
         if self.prefill_len <= 0:
             raise ValueError("prefill_len must be set (fixed prompt pad "
@@ -120,6 +134,15 @@ class ContinuousScheduler:
         self._order: List[int] = []
         self.next_rid = int(rid_start)
         self.stats = SchedulerStats(self.lanes)
+        # ---- paged KV layout: host-side block tables + allocator
+        self.kv_layout = getattr(fns, "kv_layout", "dense")
+        self.allocator: Optional[BlockAllocator] = None
+        if self.kv_layout == "paged":
+            bpl = fns.blocks_per_lane
+            nb = fns.n_blocks or 1 + self.lanes * bpl
+            self.allocator = BlockAllocator(nb, fns.block_size)
+            self.tables = np.zeros((self.lanes, bpl), dtype=np.int32)
+            self._tables_dirty = True
 
     # ------------------------------------------------------------------ state
     @property
@@ -134,6 +157,42 @@ class ContinuousScheduler:
     def idle(self) -> bool:
         return self.n_active == 0 and not self.queue
 
+    # ------------------------------------------------------------------ paged
+    def _demand_blocks(self, plen: int, max_new: int) -> int:
+        """Worst-case block demand (the shared admission formula), reserved
+        at admission so mid-flight ``extend`` can never fail
+        (preemption-free backpressure; DESIGN.md §Paged KV cache)."""
+        return demand_blocks(plen, max_new, self.width,
+                             self.fns.max_seq_len, self.fns.block_size)
+
+    def _claim_blocks(self, rs: RequestState, lane: int) -> bool:
+        """Reserve + allocate initial blocks for ``rs``; False = not enough
+        reservable blocks right now (request stays queued — backpressure)."""
+        demand = self._demand_blocks(len(rs.prompt), rs.max_new_tokens)
+        if not self.allocator.can_admit(demand):
+            self.stats.block_waits += 1
+            return False
+        initial = min(self.allocator.blocks_for_tokens(
+            len(rs.prompt) + self.width), demand)
+        ids = self.allocator.alloc(rs.rid, initial, reserve=demand)
+        self.tables[lane, :] = 0
+        self.tables[lane, :len(ids)] = ids
+        self._tables_dirty = True
+        self.stats.peak_blocks = max(self.stats.peak_blocks,
+                                     self.allocator.n_allocated)
+        return True
+
+    def _sync_tables(self) -> None:
+        """Push host-side block-table edits into the device cache dict (the
+        tables ride along as a regular input of every step fn).  Converted
+        to a device array up front: a raw np array inside the donated cache
+        pytree would change the donation mask and compile a second
+        executable (I2)."""
+        if (self.allocator is not None and self._tables_dirty
+                and self.cache is not None):
+            self.cache["block_tables"] = jnp.asarray(self.tables)
+            self._tables_dirty = False
+
     # ----------------------------------------------------------------- submit
     def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
         """Queue a request; returns its request id."""
@@ -143,6 +202,13 @@ class ContinuousScheduler:
         if len(prompt) > self.prefill_len:
             raise ValueError(f"prompt length {len(prompt)} exceeds "
                              f"prefill_len={self.prefill_len}")
+        if self.allocator is not None:
+            demand = self._demand_blocks(len(prompt), int(max_new_tokens))
+            if demand > self.allocator.capacity:
+                raise ValueError(
+                    f"request demands {demand} KV blocks; pool capacity is "
+                    f"{self.allocator.capacity} (it could never be admitted "
+                    "— deadlock)")
         rid = self.next_rid
         self.next_rid += 1
         rs = RequestState(rid=rid, prompt=prompt,
@@ -176,7 +242,13 @@ class ContinuousScheduler:
         fns = self.fns
         for lane in range(self.lanes):
             while self.states[lane] is None and self.queue:
-                rs = self.queue.popleft()
+                rs = self.queue[0]
+                if self.allocator is not None and \
+                        not self._claim_blocks(rs, lane):
+                    # not enough reservable blocks: the whole queue waits
+                    # (FIFO — no overtaking, losslessness stays order-free)
+                    return finished
+                self.queue.popleft()
                 rs.lane = lane
                 rs.admit_t = time.perf_counter()
                 trie_admit(self.trie, self.config, rs.rid, rs.prompt)
@@ -185,6 +257,7 @@ class ContinuousScheduler:
                 toks[0, :len(rs.prompt)] = np.asarray(rs.prompt,
                                                       dtype=np.int32)
                 plen = np.asarray([len(rs.prompt)], dtype=np.int32)
+                self._sync_tables()
                 self.cache, chosen = fns.prefill_into_slot(
                     self.cache, lane, toks, plen)
                 if not self._settle(rs, int(np.asarray(chosen)[0]), lane):
@@ -197,8 +270,15 @@ class ContinuousScheduler:
         FLOPs-dense phase keeps its batching; per-slot prefill only pays for
         mid-flight admissions."""
         fns = self.fns
-        cohort = [self.queue.popleft()
-                  for _ in range(min(self.lanes, len(self.queue)))]
+        cohort: List[RequestState] = []
+        while len(cohort) < self.lanes and self.queue:
+            rs = self.queue[0]
+            if self.allocator is not None and \
+                    not self._claim_blocks(rs, len(cohort)):
+                break
+            cohort.append(self.queue.popleft())
+        if not cohort:
+            return []
         toks = np.full((self.lanes, self.prefill_len), fns.pad_id,
                        dtype=np.int32)
         lens = np.ones((self.lanes,), dtype=np.int32)   # dummy rows: 1 pad
@@ -210,7 +290,11 @@ class ContinuousScheduler:
             toks[lane, :len(rs.prompt)] = np.asarray(rs.prompt,
                                                      dtype=np.int32)
             lens[lane] = len(rs.prompt)
-        self.cache, chosen = fns.prefill(toks, lens)
+        if self.allocator is not None:
+            self.cache, chosen = fns.prefill(toks, lens, self.tables.copy())
+            self._tables_dirty = False
+        else:
+            self.cache, chosen = fns.prefill(toks, lens)
         chosen = np.asarray(chosen)
         finished: List[RequestResult] = []
         for lane, rs in enumerate(cohort):
@@ -246,6 +330,7 @@ class ContinuousScheduler:
         pos = (self.lens[:, None]
                + np.stack([t.depth for t in trees])).astype(np.int32)
         mask = np.stack([t.tree_mask for t in trees])                 # (B,W,W)
+        self._sync_tables()
         self.cache, chosen = fns.tree_step(self.cache, self.lens, tok, pos,
                                            mask)
         chosen = np.asarray(chosen)
@@ -276,13 +361,50 @@ class ContinuousScheduler:
                 finished.append(self._finish(rs))
                 self.states[l] = None
                 self.lens[l] = 0
+        if self.allocator is not None:
+            self._extend_tables(active)
         return finished
+
+    def _extend_tables(self, active: List[int]) -> None:
+        """Grow surviving lanes' block tables to cover the next tree step
+        (lens + W rows).  Never fails: admission reserved each request's
+        worst-case demand up front."""
+        W = self.width
+        for l in active:
+            rs = self.states[l]
+            if rs is None:
+                continue
+            needed = self.allocator.blocks_for_tokens(int(self.lens[l]) + W)
+            cur = self.allocator.n_blocks_of(rs.rid)
+            if needed > cur:
+                new = self.allocator.extend(rs.rid, needed - cur)
+                self.tables[l, cur:needed] = new
+                self._tables_dirty = True
+        self.stats.peak_blocks = max(self.stats.peak_blocks,
+                                     self.allocator.n_allocated)
 
     # ----------------------------------------------------------------- retire
     def _finish(self, rs: RequestState) -> RequestResult:
         rs.finish_t = time.perf_counter()
+        lane = rs.lane
         rs.lane = -1
         trie_retire(self.trie, self.config, rs.rid)
+        if self.allocator is not None:
+            # free-list first, scrub second — but always BEFORE the next
+            # admission can reach the allocator, so a scrub can never hit a
+            # block that already belongs to a newly admitted request
+            freed = self.allocator.free(rs.rid)
+            if lane >= 0:
+                self.tables[lane, :] = 0
+                self._tables_dirty = True
+            if (self.scrub_freed and freed and self.cache is not None
+                    and self.fns.reset_blocks is not None):
+                ids = np.zeros((self.fns.blocks_per_lane,), dtype=np.int32)
+                ids[:len(freed)] = np.asarray(freed, dtype=np.int32)
+                self.cache = self.fns.reset_blocks(self.cache, ids)
+        elif (self.scrub_freed and self.fns.reset_slot is not None
+                and lane >= 0 and self.cache is not None):
+            self.cache = self.fns.reset_slot(self.cache, lane)
         res = rs.result()
         self.results[rs.rid] = res
         self.stats.finished += 1

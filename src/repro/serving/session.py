@@ -34,7 +34,10 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                      logits_transform: Optional[Callable] = None,
                      backend: Optional[str] = None,
                      prefill_backend: Optional[str] = None,
-                     decode_backend: Optional[str] = None) -> StepFns:
+                     decode_backend: Optional[str] = None,
+                     kv_layout: Optional[str] = None,
+                     block_size: Optional[int] = None,
+                     n_blocks: Optional[int] = None) -> StepFns:
     """Jitted prefill / prefill_into_slot / tree_step / commit closures over
     ``params``.
 
@@ -49,6 +52,12 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
     ``prefill_backend`` / ``decode_backend`` override one phase (names are
     resolved against the repro.models.attention registry — bad names fail
     here, not at trace time).
+
+    ``kv_layout`` ("dense" | "paged") / ``block_size`` override the config's
+    KV-cache layout; for the paged layout ``n_blocks`` sizes the shared
+    block pool (None = the dense-equivalent worst case of
+    lanes * ceil(max_seq_len / block_size) + 1 NULL block — serving stacks
+    pass a smaller pool sized to the workload, which is the memory win).
     """
     overrides = {}
     if backend is not None:
@@ -58,10 +67,18 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
         overrides["prefill_backend"] = prefill_backend
     if decode_backend is not None:
         overrides["decode_backend"] = decode_backend
+    if kv_layout is not None:
+        overrides["kv_layout"] = kv_layout
+    if block_size is not None:
+        overrides["kv_block_size"] = int(block_size)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     attn_backends.get_backend(cfg.prefill_backend)
     attn_backends.get_backend(cfg.decode_backend)
+    if cfg.kv_layout not in ("dense", "paged"):
+        raise ValueError(f"unknown kv_layout {cfg.kv_layout!r}")
+    if cfg.kv_layout == "paged" and cfg.kv_block_size < 1:
+        raise ValueError(f"kv_block_size={cfg.kv_block_size}")
 
     choose = functools.partial(choose_tokens, sample=sample,
                                temperature=temperature, base_key=base_key)
@@ -73,6 +90,51 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                                            axis=1)
             lg = logits_transform(lg, last_tok, (lens - 1)[:, None])
         return choose(lg, lens[:, None])[:, 0]
+
+    if cfg.kv_layout == "paged":
+        @jax.jit
+        def _prefill(tokens, lens, block_tables):
+            cache = tx.init_paged_cache(cfg, tokens.shape[0], n_blocks)
+            cache["block_tables"] = jnp.asarray(block_tables, jnp.int32)
+            cache, last_logits = tx.prefill_paged(cfg, params, tokens, lens,
+                                                  cache)
+            return cache, _choose_last(tokens, lens, last_logits)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _prefill_into_slot(cache, slot, tokens, lens):
+            cache, last_logits = tx.prefill_into_slot_paged(
+                cfg, params, cache, slot, tokens, lens)
+            return cache, _choose_last(tokens, lens, last_logits)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _tree_step(cache, cache_lens, tokens, pos, mask):
+            cache, logits = tx.tree_step_paged(cfg, params, cache,
+                                               cache_lens, tokens, pos, mask)
+            if logits_transform is not None:
+                logits = logits_transform(logits, tokens, pos)
+            chosen = choose(logits, pos + 1)
+            return cache, chosen
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _commit(cache, cache_lens, gather_idx, n_accept):
+            return tx.commit_paged_cache(cfg, cache, cache_lens, gather_idx,
+                                         n_accept)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _reset_blocks(cache, block_ids):
+            return tx.reset_blocks(cache, block_ids)
+
+        def _init_cache(lanes: int):
+            return tx.init_paged_cache(cfg, lanes, n_blocks)
+
+        return StepFns(prefill=_prefill, tree_step=_tree_step,
+                       commit=_commit, slots=slots,
+                       max_seq_len=cfg.max_seq_len, pad_id=pad_id,
+                       init_cache=_init_cache,
+                       prefill_into_slot=_prefill_into_slot,
+                       reset_slot=None, prefill_len=prefill_len,
+                       kv_layout="paged", block_size=cfg.kv_block_size,
+                       n_blocks=n_blocks, reset_blocks=_reset_blocks)
 
     @jax.jit
     def _prefill(tokens, lens):

@@ -1,0 +1,133 @@
+"""BlockAllocator unit tests: alloc/extend/free, free-list reuse,
+reservation accounting, fragmentation, and scheduler admission backpressure
+when blocks are exhausted (the queue must drain without deadlock)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LookaheadConfig, reference_decode
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.block_allocator import NULL_BLOCK, BlockAllocator
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.session import make_session_fns
+
+pytestmark = pytest.mark.paged
+
+
+# ------------------------------------------------------------------ alloc/free
+def test_alloc_hands_out_distinct_nonnull_ids():
+    a = BlockAllocator(n_blocks=8, block_size=16)
+    ids = a.alloc(1, 4)
+    assert len(ids) == len(set(ids)) == 4
+    assert NULL_BLOCK not in ids
+    assert all(1 <= b < 8 for b in ids)
+    assert a.table(1) == ids
+    assert a.n_free == 3 and a.n_allocated == 4
+
+
+def test_extend_appends_and_respects_reservation():
+    a = BlockAllocator(n_blocks=10, block_size=16)
+    first = a.alloc(7, 2, reserve=5)
+    more = a.extend(7, 2)
+    assert a.table(7) == first + more
+    assert a.n_blocks_of(7) == 4 and a.reserved_of(7) == 5
+    a.extend(7, 1)
+    with pytest.raises(RuntimeError):
+        a.extend(7, 1)           # beyond the reservation
+
+
+def test_free_returns_blocks_and_reuses_them():
+    a = BlockAllocator(n_blocks=6, block_size=16)
+    ids = a.alloc(1, 5)
+    freed = a.free(1)
+    assert sorted(freed) == sorted(ids)
+    assert a.n_free == 5 and a.n_reserved == 0
+    # the free list really is reused, not regrown
+    again = a.alloc(2, 5)
+    assert sorted(again) == sorted(ids)
+    with pytest.raises(KeyError):
+        a.free(1)
+
+
+def test_reservation_backpressure_accounting():
+    a = BlockAllocator(n_blocks=9, block_size=16)     # capacity 8
+    a.alloc(1, 1, reserve=5)
+    # only 1 block physically taken, but 5 promised: available is 3
+    assert a.n_allocated == 1 and a.available == 3
+    assert a.can_admit(3) and not a.can_admit(4)
+    with pytest.raises(RuntimeError):
+        a.alloc(2, 1, reserve=4)
+    a.free(1)
+    assert a.can_admit(8)
+    with pytest.raises(ValueError):
+        a.alloc(3, 1, reserve=9)  # can never fit -> error, not backpressure
+
+
+def test_alloc_errors():
+    a = BlockAllocator(n_blocks=4, block_size=8)
+    a.alloc(1, 1)
+    with pytest.raises(ValueError):
+        a.alloc(1, 1)            # duplicate rid
+    with pytest.raises(ValueError):
+        a.alloc(2, 3, reserve=2)  # reserve < initial
+    with pytest.raises(KeyError):
+        a.extend(99, 1)
+    with pytest.raises(ValueError):
+        BlockAllocator(n_blocks=1, block_size=8)   # no room beside NULL
+
+
+def test_fragmentation_accounting():
+    a = BlockAllocator(n_blocks=16, block_size=16)
+    a.alloc(1, 3)                 # 48 rows allocated
+    a.alloc(2, 1)                 # 16 rows allocated
+    assert a.blocks_for_tokens(33) == 3
+    assert a.frag_rows(1, 33) == 48 - 33
+    assert a.frag_rows(2, 16) == 0
+    assert a.frag_rows_total({1: 33, 2: 16}) == 15
+    # unknown usage counts the whole allocation as waste
+    assert a.frag_rows_total({1: 33}) == 15 + 16
+
+
+# --------------------------------------------------- scheduler backpressure
+def test_scheduler_block_backpressure_drains_without_deadlock():
+    """A pool too small for concurrent requests serializes admissions
+    (block_waits > 0) yet every request completes losslessly."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=53, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(3))
+    bs = 16
+    rng = np.random.RandomState(31)
+    prompts = [list(rng.randint(1, 52, size=rng.randint(4, 24)))
+               for _ in range(5)]
+    budgets = [12, 5, 12, 3, 9]
+    la = LookaheadConfig(decoding_length=8, branch_length=4)
+    # demand per request: ceil((plen + max_new + 9)/16) <= 3 blocks; a pool
+    # of 4 usable blocks can hold at most one long request at a time
+    fns = make_session_fns(cfg, params, slots=9, prefill_len=32,
+                           kv_layout="paged", block_size=bs, n_blocks=5)
+    refs = [reference_decode(fns, p, m) for p, m in zip(prompts, budgets)]
+    sched = ContinuousScheduler(fns, la, lanes=2, prefill_len=32)
+    for p, m in zip(prompts, budgets):
+        sched.submit(p, m)
+    res = sched.run()
+    assert len(res) == len(prompts)
+    for r, ref in zip(res, refs):
+        assert r.tokens == ref
+    assert sched.stats.block_waits > 0          # backpressure actually hit
+    assert sched.stats.peak_blocks <= sched.allocator.capacity
+    assert sched.allocator.n_free == sched.allocator.capacity  # all returned
+    assert sched.allocator.n_reserved == 0
+
+
+def test_scheduler_rejects_unservable_request():
+    """A single request whose worst-case demand exceeds the whole pool is
+    refused at submit (it could never be admitted -> deadlock)."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=53, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(3))
+    fns = make_session_fns(cfg, params, slots=9, prefill_len=32,
+                           kv_layout="paged", block_size=16, n_blocks=3)
+    la = LookaheadConfig(decoding_length=8, branch_length=4)
+    sched = ContinuousScheduler(fns, la, lanes=2, prefill_len=32)
+    with pytest.raises(ValueError):
+        sched.submit(list(range(1, 30)), 100)

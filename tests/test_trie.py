@@ -1,8 +1,23 @@
+import random
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.trie import TrieTree
+
+
+def _walk(trie):
+    """Snapshot the trie as {root-path: (freq, frozenset(prompt rids))}."""
+    out = {}
+    stack = [((), trie.root)]
+    while stack:
+        path, node = stack.pop()
+        for tok, child in node.children.items():
+            p = path + (tok,)
+            out[p] = (child.freq, frozenset(child.prompt_freq))
+            stack.append((p, child))
+    return out
 
 
 def test_insert_retrieve_roundtrip():
@@ -93,3 +108,98 @@ def test_property_capacity_bound(cap_factor, tokens):
     t.insert_ngrams(tokens, branch_length=4)
     # decay=0 prune removes every prunable node when tripped
     assert len(t) <= max(cap, 4)
+
+
+# --------------------------------------------------------------------------
+# Random-operation invariants (ISSUE 3 satellite): after ANY interleaving of
+# insert / eliminate / decay-prune, the trie's bookkeeping stays consistent,
+# retrieval only ever returns real root-paths, and eliminating one request
+# never perturbs persistent (output-branch) frequencies.
+# --------------------------------------------------------------------------
+BRANCH_LEN = 4
+
+
+def _random_ops(rng, t, n_ops, vocab=12):
+    """Apply a random op sequence; returns the set of live prompt rids."""
+    live = set()
+    for _ in range(n_ops):
+        op = rng.randrange(4)
+        if op == 0:                                     # output branch
+            toks = [rng.randrange(vocab)
+                    for _ in range(rng.randint(1, BRANCH_LEN))]
+            t.insert(toks)
+        elif op == 1:                                   # prompt branch
+            rid = rng.randrange(6)
+            toks = [rng.randrange(vocab)
+                    for _ in range(rng.randint(2, 2 * BRANCH_LEN))]
+            t.insert_ngrams(toks, BRANCH_LEN, request_id=rid)
+            live.add(rid)
+        elif op == 2 and live:                          # branch eliminating
+            rid = rng.choice(sorted(live))
+            t.eliminate(rid)
+            live.discard(rid)
+        else:                                           # decay-prune
+            t.prune()
+    return live
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_node_count_consistent_and_bounded(seed):
+    rng = random.Random(seed)
+    cap = rng.choice([8, 16, 32])
+    t = TrieTree(capacity=cap, decay=0.0)
+    live = _random_ops(rng, t, rng.randint(5, 40))
+    snap = _walk(t)
+    # len(t) is exactly the number of live nodes (no leaked bookkeeping)
+    assert len(t) == len(snap)
+    # with decay=0 every prune removes all unprotected nodes, so the trie
+    # can only exceed capacity by live prompt paths plus the overshoot of
+    # the single insert that tripped the prune
+    protected = sum(1 for _, (f, rids) in snap.items() if rids)
+    assert len(t) <= max(cap, protected) + 2 * BRANCH_LEN
+    # eliminating every live request with decay=0 prunes to (almost) empty
+    for rid in sorted(live):
+        t.eliminate(rid)
+    t.prune()
+    assert len(t) <= 2 * BRANCH_LEN
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_retrieved_branches_are_root_paths(seed):
+    rng = random.Random(seed)
+    t = TrieTree(capacity=64, decay=0.5)
+    _random_ops(rng, t, rng.randint(5, 40))
+    for _ in range(5):
+        ctx = [rng.randrange(12) for _ in range(rng.randint(1, 8))]
+        branches, scores = t.retrieve(ctx, decoding_length=16)
+        assert len(branches) == len(scores)
+        for br in branches:
+            # the branch must extend some suffix of the context through
+            # real trie nodes (retrieve matched exactly such a suffix)
+            assert any(
+                t.match(ctx[-plen:] + br) is not None
+                for plen in range(1, min(8, len(ctx)) + 1)), (ctx, br)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_eliminate_preserves_persistent_freqs(seed):
+    rng = random.Random(seed)
+    t = TrieTree(capacity=10_000)    # no pruning interference
+    live = _random_ops(rng, t, rng.randint(5, 30))
+    before = _walk(t)
+    victim = rng.choice(sorted(live)) if live else 99
+    t.eliminate(victim)
+    after = _walk(t)
+    for path, (freq, rids) in before.items():
+        if freq > 0.0:
+            # persistent frequency survives any other request's elimination
+            assert path in after, (path, victim)
+            assert after[path][0] == freq, path
+        if path in after:
+            assert after[path][1] == rids - {victim}, path
+    # no path appears from nowhere
+    assert set(after) <= set(before)
+
