@@ -29,7 +29,8 @@ from typing import Sequence, Tuple
 
 from benchmarks.common import (VOCAB, bench_model, emit,
                                make_dataset, make_guided_session_fns)
-from repro.core import LookaheadConfig, LookaheadEngine
+from repro.core import (LookaheadConfig, LookaheadEngine, Request,
+                        SamplingParams)
 from repro.serving.scheduler import ContinuousScheduler
 
 PREFILL_LEN = 64
@@ -37,13 +38,28 @@ LANES = 4
 BLOCK_SIZE = 64
 
 
-def _continuous(fns, la, prompts, budgets, lanes
+def _mixed_params(budgets):
+    """Per-request SamplingParams alternating greedy and sampled traffic
+    (distinct temperatures/seeds) — seeded sampling is deterministic, so
+    outputs must stay bit-identical across layouts/backends/disciplines."""
+    return [SamplingParams(max_new_tokens=m) if i % 2 else
+            SamplingParams(max_new_tokens=m, sample=True,
+                           temperature=(0.4, 0.7, 1.0)[i % 3], seed=100 + i)
+            for i, m in enumerate(budgets)]
+
+
+def _continuous(fns, la, prompts, specs, lanes
                 ) -> Tuple[list, float, object, int]:
+    """One scheduler generation; ``specs`` are per-request budgets (ints,
+    legacy submit) or SamplingParams (request-centric submit)."""
     sched = ContinuousScheduler(fns, la, lanes=lanes,
                                 prefill_len=PREFILL_LEN)
     t0 = time.perf_counter()
-    for p, m in zip(prompts, budgets):
-        sched.submit(p, m)
+    for p, s in zip(prompts, specs):
+        if isinstance(s, SamplingParams):
+            sched.submit_request(Request(prompt=list(p), params=s))
+        else:
+            sched.submit(p, s)
     out = sched.run()
     wall = time.perf_counter() - t0
     cache_bytes = sum(v.nbytes for v in sched.cache.values()) \
@@ -143,6 +159,37 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
                 layout_bytes
         emit("kv_cache_savings[paged/dense]", 0.0,
              f"{layout_bytes['dense'] / layout_bytes['paged']:.2f}x")
+
+    # --- mixed per-request sampling traffic (request-centric API): greedy
+    # and sampled requests at distinct temperatures/seeds co-batched in ONE
+    # lane pool; seeded position-keyed sampling is deterministic, so every
+    # (layout, backend) cell and the lock-step baseline must agree
+    # bit-for-bit per request
+    plist = _mixed_params(budgets)
+    mixed_lock = LookaheadEngine(fns, la).generate_batch_lockstep(
+        prompts, params=plist)
+    for layout in kv_layouts:
+        for backend in backends:
+            if layout == "dense" and backend == "dense":
+                fns_b = fns
+            else:
+                fns_b = make_guided_session_fns(
+                    cfg, params, phase=2, slots=la.slots,
+                    prefill_len=PREFILL_LEN, backend=backend,
+                    kv_layout=layout,
+                    block_size=BLOCK_SIZE if layout == "paged" else None,
+                    n_blocks=paged_blocks if layout == "paged" else None)
+            mixed_out, mixed_wall, mstats, _ = _continuous(
+                fns_b, la, prompts, plist, lanes)
+            for a, b in zip(mixed_lock, mixed_out):
+                assert a.tokens == b.tokens, \
+                    f"mixed sampling: kv_layout {layout!r} / backend " \
+                    f"{backend!r} changed an output"
+            mtok = sum(len(o.tokens) for o in mixed_out)
+            emit(f"mixed_sampling[{layout}/{backend}]",
+                 mixed_wall / max(mtok, 1) * 1e6,
+                 f"{mtok / mixed_wall:.1f} tok/s | "
+                 f"{mstats.decode_steps} steps | lossless-per-params ✓")
 
 
 if __name__ == "__main__":

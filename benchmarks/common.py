@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import LookaheadConfig, LookaheadEngine
 from repro.models.transformer import TransformerConfig, init_params
-from repro.serving.session import make_session_fns
+from repro.serving.api import EngineConfig, build_session_fns
 from repro.training.data import PROFILES, SyntheticCorpus
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
@@ -69,10 +69,12 @@ def make_guided_session_fns(cfg, params, *, phase: int, seed: int = 0,
         return logits + 1e4 * jax.nn.one_hot(nxt, cfg.vocab_size,
                                              dtype=logits.dtype)
 
-    return make_session_fns(cfg, params, slots=slots, pad_id=pad_id,
-                            prefill_len=prefill_len, logits_transform=bias,
-                            backend=backend, kv_layout=kv_layout,
-                            block_size=block_size, n_blocks=n_blocks)
+    ecfg = EngineConfig(prefill_len=prefill_len,
+                        decoding_length=slots - 1, pad_id=pad_id,
+                        backend=backend,
+                        kv_layout=kv_layout or "dense",
+                        block_size=block_size or 64, n_blocks=n_blocks)
+    return build_session_fns(ecfg, cfg, params, logits_transform=bias)
 
 
 @dataclass

@@ -1,33 +1,35 @@
-"""Quickstart: lossless Lookahead decoding on a small LM.
+"""Quickstart: lossless Lookahead decoding behind the request-centric API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
-from repro.core import (LookaheadConfig, LookaheadEngine, baseline_config,
-                        reference_decode)
+from repro.core import Request, SamplingParams, reference_decode
 from repro.models.transformer import TransformerConfig, init_params
-from repro.serving.session import make_session_fns
+from repro.serving.api import EngineConfig, build_engine
 
 
 def main() -> None:
     cfg = TransformerConfig(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
                             d_ff=256, vocab_size=512, max_seq_len=512)
     params = init_params(cfg, jax.random.key(0))
-    la = LookaheadConfig(decoding_length=32, branch_length=8,
-                         strategy="hierarchical")
-    fns = make_session_fns(cfg, params, slots=la.slots)
+
+    # one validated spec; build_engine compiles the session and wires the
+    # continuous-batching scheduler behind a Request/handle surface
+    ecfg = EngineConfig(lanes=2, prefill_len=64, decoding_length=32,
+                        branch_length=8)
+    engine = build_engine(ecfg, cfg, params)
 
     prompt = list(np.random.RandomState(0).randint(2, 512, size=48))
 
     # ground truth: plain step-by-step greedy decoding
-    ref = reference_decode(fns, prompt, max_new_tokens=64)
+    ref = reference_decode(engine.fns, prompt, max_new_tokens=64)
 
-    # lookahead: same model functions, trie-driven multi-branch drafts
-    engine = LookaheadEngine(fns, la)
+    # lookahead: same model functions, trie-driven multi-branch drafts.
+    # submit() returns a streaming handle; result() drives to completion.
     engine.warmup([ref])             # e.g. a previous response for this topic
-    out = engine.generate(prompt, max_new_tokens=64)
+    out = engine.submit(prompt, max_new_tokens=64).result()
 
     assert out.tokens == ref, "lossless property violated!"
     print(f"output ({len(out.tokens)} tokens): {out.tokens[:16]} ...")
@@ -37,32 +39,49 @@ def main() -> None:
           f"(= speedup in the IO-bound decode regime)")
     print("LOSSLESS ✓ — identical to step-by-step greedy decoding")
 
-    # attention-backend selection: the same session under the Pallas
+    # mixed per-request sampling in ONE lane pool: a greedy and a sampled
+    # request co-batched; each is bit-identical to step-by-step decoding
+    # under its own params (the per-lane param vectors are traced inputs)
+    sampled = SamplingParams(max_new_tokens=64, sample=True,
+                             temperature=0.7, seed=42)
+    h_greedy = engine.submit(prompt, max_new_tokens=64)
+    h_sampled = engine.submit(Request(prompt=prompt, params=sampled))
+    deltas = []
+    h_sampled.on_token(deltas.extend)        # incremental stream
+    r_greedy, r_sampled = h_greedy.result(), h_sampled.result()
+    assert r_greedy.tokens == ref
+    assert r_sampled.tokens == reference_decode(engine.fns, prompt,
+                                                params=sampled)
+    assert deltas == r_sampled.tokens        # stream == final result
+    print("mixed params ✓ — greedy + sampled co-batched, both lossless; "
+          f"sampled stream arrived in {r_sampled.stats.steps} deltas")
+
+    # attention-backend selection: the same engine spec under the Pallas
     # tree-attention / flash-prefill kernels (compiled on TPU, interpret
     # mode elsewhere) — outputs stay bit-identical per backend (I1)
-    fns_pallas = make_session_fns(cfg, params, slots=la.slots,
-                                  backend="pallas")
-    engine_pallas = LookaheadEngine(fns_pallas, la)
+    import dataclasses
+    engine_pallas = build_engine(dataclasses.replace(ecfg, backend="pallas"),
+                                 cfg, params)
     engine_pallas.warmup([ref])
-    out_pallas = engine_pallas.generate(prompt, max_new_tokens=64)
+    out_pallas = engine_pallas.submit(prompt, max_new_tokens=64).result()
     assert out_pallas.tokens == out.tokens, "backend changed an output!"
     print("pallas backend ✓ — same tokens through the blocked kernels")
 
     # paged KV cache: a block pool sized to the actual footprint
     # (prompt + budget + tree width) instead of max_seq_len per lane —
     # outputs stay bit-identical (DESIGN.md §Paged KV cache)
-    from repro.serving.block_allocator import demand_blocks
-    blocks = demand_blocks(len(prompt), 64, la.slots, cfg.max_seq_len, 64)
-    fns_paged = make_session_fns(cfg, params, slots=la.slots,
-                                 kv_layout="paged", block_size=64,
-                                 n_blocks=1 + blocks)
-    engine_paged = LookaheadEngine(fns_paged, la)
+    from repro.serving.block_allocator import worst_case_pool_blocks
+    blocks = worst_case_pool_blocks(2, 64, 64, ecfg.slots, cfg.max_seq_len,
+                                    64)
+    engine_paged = build_engine(
+        dataclasses.replace(ecfg, kv_layout="paged", block_size=64,
+                            n_blocks=blocks), cfg, params)
     engine_paged.warmup([ref])
-    out_paged = engine_paged.generate(prompt, max_new_tokens=64)
+    out_paged = engine_paged.submit(prompt, max_new_tokens=64).result()
     assert out_paged.tokens == out.tokens, "kv layout changed an output!"
-    dense_rows, paged_rows = cfg.max_seq_len, blocks * 64
-    print(f"paged kv cache ✓ — same tokens from {paged_rows} cache rows "
-          f"instead of {dense_rows}")
+    dense_rows, paged_rows = cfg.max_seq_len, (blocks - 1) * 64
+    print(f"paged kv cache ✓ — same tokens from {paged_rows} pooled cache "
+          f"rows instead of {dense_rows} per lane")
 
 
 if __name__ == "__main__":

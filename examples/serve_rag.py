@@ -1,56 +1,68 @@
-"""End-to-end serving driver: batched requests through one LookaheadEngine
+"""End-to-end serving driver: a stream of requests through one ServingEngine
 whose trie stays warm across requests (the Alipay deployment pattern —
-paper §5.3).  RAG-profile synthetic traffic; per-request lossless check.
+paper §5.3).  RAG-profile synthetic traffic with mixed per-request sampling;
+per-request lossless check under each request's own params.
 
-    PYTHONPATH=src python examples/serve_rag.py [--requests 12] [--batch 2]
+    PYTHONPATH=src python examples/serve_rag.py [--requests 12] [--lanes 2]
 """
 import argparse
 import time
 
 import jax
 
-from repro.core import LookaheadConfig, LookaheadEngine, reference_decode
+from repro.core import Request, SamplingParams, reference_decode
 from repro.models.transformer import TransformerConfig, init_params
-from repro.serving.session import make_session_fns
+from repro.serving.api import EngineConfig, build_engine
 from repro.training.data import PROFILES, SyntheticCorpus
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--lanes", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=48)
     args = ap.parse_args()
 
     cfg = TransformerConfig(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
                             d_ff=256, vocab_size=512, max_seq_len=768)
     params = init_params(cfg, jax.random.key(0))
-    la = LookaheadConfig(decoding_length=32, branch_length=12,
-                         strategy="hierarchical")
-    fns = make_session_fns(cfg, params, slots=la.slots)
-    engine = LookaheadEngine(fns, la)
+    ecfg = EngineConfig(lanes=args.lanes, prefill_len=128,
+                        decoding_length=32, branch_length=12)
+    engine = build_engine(ecfg, cfg, params)
 
     corpus = SyntheticCorpus(PROFILES["antrag"], 512, seed=7)
-    requests = [corpus.sample()[0][:96] for _ in range(args.requests)]
+    requests = [
+        Request(prompt=corpus.sample()[0][:96],
+                params=SamplingParams(max_new_tokens=args.max_new)
+                if i % 3 else
+                SamplingParams(max_new_tokens=args.max_new, sample=True,
+                               temperature=0.8, seed=7 * i + 1),
+                metadata={"i": i})
+        for i in range(args.requests)]
 
     # dev-set warmup (paper Appendix D): preload responses
-    engine.warmup([reference_decode(fns, p, args.max_new)
-                   for p in requests[:2]])
+    engine.warmup([reference_decode(engine.fns, r.prompt, params=r.params)
+                   for r in requests[:2]])
 
-    served = 0
     t0 = time.time()
-    for i in range(0, len(requests), args.batch):
-        chunk = requests[i:i + args.batch]
-        outs = engine.generate_batch(chunk, args.max_new)
-        for p, o in zip(chunk, outs):
-            ref = reference_decode(fns, p, args.max_new)
-            status = "LOSSLESS✓" if o.tokens == ref else "MISMATCH✗"
-            print(f"req{served:03d}: {len(o.tokens)} tokens in "
-                  f"{o.stats.steps} steps (EDL {o.stats.edl:.2f}) {status}")
-            served += 1
+    handles = [engine.submit(r) for r in requests]
+    engine.run()                       # continuous batching drains the pool
     dt = time.time() - t0
-    print(f"\nserved {served} requests in {dt:.1f}s; trie holds "
-          f"{len(engine.trie)} nodes (~{engine.trie.memory_bytes()//1024} KiB)")
+
+    for r, h in zip(requests, handles):
+        o = h.result()
+        ref = reference_decode(engine.fns, r.prompt, params=r.params)
+        mode = (f"sampled τ={r.params.temperature}" if r.params.sample
+                else "greedy")
+        status = "LOSSLESS✓" if o.tokens == ref else "MISMATCH✗"
+        print(f"req{r.metadata['i']:03d} [{mode:>12s}]: {len(o.tokens)} "
+              f"tokens in {o.stats.steps} steps (EDL {o.stats.edl:.2f}) "
+              f"{status}")
+    st = engine.stats
+    print(f"\nserved {st.finished} requests in {dt:.1f}s "
+          f"(occupancy {st.occupancy:.2f}); trie holds "
+          f"{len(engine.trie)} nodes "
+          f"(~{engine.trie.memory_bytes()//1024} KiB)")
 
 
 if __name__ == "__main__":

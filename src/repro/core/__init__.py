@@ -2,8 +2,9 @@
 from .draft import (BUILDERS, DraftTree, build_hierarchical, build_parallel,
                     build_single, repad)
 from .engine import LookaheadEngine, reference_decode
-from .request import (GenStats, RequestResult, RequestState, StepFns,
-                      build_draft_tree, idle_tree, trie_admit, trie_retire,
+from .request import (GenStats, Request, RequestResult, RequestState,
+                      SamplingParams, StepFns, build_draft_tree,
+                      cache_token_limit, idle_tree, trie_admit, trie_retire,
                       trie_stream)
 from .single_branch import baseline_config, llma_config
 from .strategies import LookaheadConfig
@@ -12,8 +13,9 @@ from .verify import verify_accept, verify_accept_batch
 
 __all__ = [
     "BUILDERS", "DraftTree", "build_hierarchical", "build_parallel",
-    "build_single", "repad", "GenStats", "LookaheadEngine", "RequestResult",
-    "RequestState", "StepFns", "build_draft_tree", "idle_tree", "trie_admit",
+    "build_single", "repad", "GenStats", "LookaheadEngine", "Request",
+    "RequestResult", "RequestState", "SamplingParams", "StepFns",
+    "build_draft_tree", "cache_token_limit", "idle_tree", "trie_admit",
     "trie_retire", "trie_stream", "reference_decode", "baseline_config",
     "llma_config", "LookaheadConfig", "TrieTree", "verify_accept",
     "verify_accept_batch",

@@ -1,5 +1,5 @@
-"""LookaheadEngine — the serving entry point tying trie, draft, model and VA
-together.
+"""LookaheadEngine — the legacy serving entry point tying trie, draft, model
+and VA together.
 
 The engine is model-agnostic: it drives jitted device functions built by
 ``repro.serving.session.make_session_fns`` (or any object satisfying
@@ -19,35 +19,67 @@ Step anatomy (greedy; sample mode replaces argmax with position-keyed sample):
 Worst case: no draft matched ⇒ accepted == [chosen[root]] ⇒ identical to
 step-by-step decoding.  Best case: len(accepted) == 1 + draft tree depth.
 
-``generate`` / ``generate_batch`` are thin wrappers over the slot-based
-``ContinuousScheduler`` (serving/scheduler.py) whenever the StepFns support
-per-slot admission; ``generate_batch_lockstep`` keeps the legacy all-requests
--step-together loop (the baseline the continuous-batching benchmark compares
-against).  Both loops share the per-request primitives in core/request.py, so
-losslessness holds identically on either path.
+``generate`` / ``generate_batch`` are thin *compat wrappers* over the
+request-centric API (``repro.serving.api``): each prompt becomes a
+``Request`` with per-request ``SamplingParams``, served by the slot-based
+``ContinuousScheduler``; ``generate_batch_lockstep`` keeps the legacy
+all-requests-step-together loop (the baseline the continuous-batching
+benchmark compares against).  Both loops share the per-request primitives in
+core/request.py — including the token-granular ``cache_token_limit``
+retirement bound — so losslessness AND the cache-overflow truncation point
+hold identically on either path.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Union
+import dataclasses
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from .request import (GenStats, RequestResult, RequestState, StepFns,
-                      build_draft_tree, idle_tree, trie_admit, trie_retire,
+from .request import (GenStats, Request, RequestResult, RequestState,
+                      SamplingParams, StepFns, build_draft_tree,
+                      cache_token_limit, idle_tree, trie_admit, trie_retire,
                       trie_stream)
 from .strategies import LookaheadConfig
 from .trie import TrieTree
 from .verify import verify_accept_batch
 
 MaxNew = Union[int, Sequence[int]]
+ParamSpec = Union[SamplingParams, Sequence[SamplingParams], None]
 
 
 def _budgets(max_new_tokens: MaxNew, n: int) -> List[int]:
     if isinstance(max_new_tokens, (int, np.integer)):
         return [int(max_new_tokens)] * n
     budgets = [int(m) for m in max_new_tokens]
-    assert len(budgets) == n, (len(budgets), n)
+    if len(budgets) != n:
+        raise ValueError(
+            f"max_new_tokens lists one budget per prompt: got "
+            f"{len(budgets)} budgets for {n} prompts")
     return budgets
+
+
+def _per_request_params(fns: StepFns, n: int, max_new_tokens: Optional[MaxNew],
+                        params: ParamSpec) -> List[SamplingParams]:
+    """Normalize the compat surface to one ``SamplingParams`` per request:
+    explicit params win; otherwise the session defaults with the per-call
+    budgets."""
+    if params is None:
+        if max_new_tokens is None:
+            raise ValueError("pass max_new_tokens or per-request params")
+        defaults = fns.default_params
+        return [dataclasses.replace(defaults, max_new_tokens=b)
+                for b in _budgets(max_new_tokens, n)]
+    if max_new_tokens is not None:
+        raise ValueError("pass either max_new_tokens or params, not both "
+                         "(params carry their own max_new_tokens)")
+    if isinstance(params, SamplingParams):
+        return [params.validate()] * n
+    plist = list(params)
+    if len(plist) != n:
+        raise ValueError(f"params lists one spec per prompt: got "
+                         f"{len(plist)} specs for {n} prompts")
+    return [p.validate() for p in plist]
 
 
 class LookaheadEngine:
@@ -79,22 +111,28 @@ class LookaheadEngine:
         return self.fns.slots
 
     # --------------------------------------------------------------- generate
-    def generate(self, prompt: Sequence[int], max_new_tokens: int,
-                 ) -> RequestResult:
-        res = self.generate_batch([prompt], max_new_tokens)
+    def generate(self, prompt: Sequence[int],
+                 max_new_tokens: Optional[int] = None,
+                 params: Optional[SamplingParams] = None) -> RequestResult:
+        res = self.generate_batch([prompt], max_new_tokens, params=params)
         return res[0]
 
     def generate_batch(self, prompts: Sequence[Sequence[int]],
-                       max_new_tokens: MaxNew) -> List[RequestResult]:
-        """Serve ``prompts`` to completion; per-request budgets allowed.
+                       max_new_tokens: Optional[MaxNew] = None,
+                       params: ParamSpec = None) -> List[RequestResult]:
+        """Serve ``prompts`` to completion; per-request budgets or full
+        per-request ``SamplingParams`` allowed.
 
-        Routes through the continuous scheduler (one lane per prompt, all
-        admitted up front) when the StepFns support slot serving; otherwise
-        falls back to the legacy lock-step loop.  Output tokens are identical
-        either way (lossless per request).
+        Compat wrapper over the request-centric API: each prompt becomes a
+        ``Request`` submitted to the continuous scheduler (one lane per
+        prompt, all admitted up front) when the StepFns support slot
+        serving; otherwise falls back to the legacy lock-step loop.  Output
+        tokens are identical either way (lossless per request).
         """
+        plist = _per_request_params(self.fns, len(prompts), max_new_tokens,
+                                    params)
         if not self.fns.supports_slot_serving:
-            return self.generate_batch_lockstep(prompts, max_new_tokens)
+            return self.generate_batch_lockstep(prompts, params=plist)
         prefill_len = self.fns.prefill_len or max(len(p) for p in prompts)
         if prefill_len + self.tree_width > self.fns.max_seq_len:
             # near-max-length prompts: the scheduler refuses admission
@@ -107,22 +145,23 @@ class LookaheadEngine:
                     f"{self.fns.max_seq_len}, and the paged layout has no "
                     "lock-step fallback — shorten the prompt, raise "
                     "max_seq_len, or use kv_layout='dense'")
-            return self.generate_batch_lockstep(prompts, max_new_tokens)
+            return self.generate_batch_lockstep(prompts, params=plist)
         from repro.serving.scheduler import ContinuousScheduler
-        budgets = _budgets(max_new_tokens, len(prompts))
         sched = ContinuousScheduler(
             self.fns, self.config, lanes=len(prompts), trie=self.trie,
             eos_id=self.eos_id, prefill_len=prefill_len,
             rid_start=self._next_request_id)
-        for p, m in zip(prompts, budgets):
-            sched.submit(p, m)
-        results = sched.run()
+        handles = [sched.submit_request(Request(prompt=list(p), params=pp))
+                   for p, pp in zip(prompts, plist)]
+        sched.run()
         self._next_request_id = sched.next_rid
-        return results
+        return [h.result() for h in handles]
 
     # --------------------------------------------------------------- lockstep
     def generate_batch_lockstep(self, prompts: Sequence[Sequence[int]],
-                                max_new_tokens: MaxNew) -> List[RequestResult]:
+                                max_new_tokens: Optional[MaxNew] = None,
+                                params: ParamSpec = None
+                                ) -> List[RequestResult]:
         """Legacy loop: all requests step together; finished requests idle in
         their slot until the slowest request of the batch drains."""
         cfg, fns = self.config, self.fns
@@ -133,33 +172,54 @@ class LookaheadEngine:
                 "block allocator)")
         B = len(prompts)
         W = self.tree_width
-        budgets = _budgets(max_new_tokens, B)
+        plist = _per_request_params(fns, B, max_new_tokens, params)
         states = [RequestState(rid=self._next_request_id + i,
                                prompt=list(prompts[i]),
-                               max_new_tokens=budgets[i], eos_id=self.eos_id)
+                               max_new_tokens=plist[i].max_new_tokens,
+                               eos_id=self.eos_id, params=plist[i],
+                               token_limit=cache_token_limit(
+                                   fns.max_seq_len, W, len(prompts[i])))
                   for i in range(B)]
         self._next_request_id += B
 
         for rs in states:
             trie_admit(self.trie, cfg, rs.rid, rs.prompt)
 
+        # per-lane sampling vectors (lane i <-> request i, fixed for the
+        # whole batch); legacy StepFns without per-lane support fall back to
+        # their session-level constants
+        lane_kw = {}
+        if fns.per_lane_params:
+            lane_kw["lane_params"] = {
+                "greedy": np.asarray([not p.sample for p in plist]),
+                "temp": np.asarray([p.temperature for p in plist],
+                                   dtype=np.float32),
+                "seed": np.asarray([np.uint32(p.seed) for p in plist],
+                                   dtype=np.uint32)}
+
         # --- prefill (pad to a common fixed length when configured)
         S = fns.prefill_len or max(len(p) for p in prompts)
         toks = np.full((B, S), fns.pad_id, dtype=np.int32)
         lens = np.zeros((B,), dtype=np.int32)
         for b, p in enumerate(prompts):
-            assert len(p) <= S, (len(p), S)
+            if len(p) > S:
+                raise ValueError(
+                    f"prompt {b} has {len(p)} tokens but the session pads "
+                    f"prompts to prefill_len={S}; shorten the prompt or "
+                    "rebuild the session with a larger prefill_len")
             toks[b, :len(p)] = np.asarray(p, dtype=np.int32)
             lens[b] = len(p)
-        cache, chosen_root = fns.prefill(toks, lens)
+        cache, chosen_root = fns.prefill(toks, lens, **lane_kw)
         chosen_root = np.asarray(chosen_root)
         cache_lens = lens.copy()
         for b, rs in enumerate(states):
             rs.start(int(chosen_root[b]))
-            # a first tree step would scatter past the cache end: stop at
-            # the prefill token rather than commit garbage
+            # backstop (cache_token_limit already caps the budget): a first
+            # tree step would scatter past the cache end — stop at the
+            # prefill token rather than commit garbage
             if cache_lens[b] + W > fns.max_seq_len:
                 rs.done = True
+                rs.finish_reason = rs.finish_reason or "cache"
 
         while any(not rs.done for rs in states):
             trees = [build_draft_tree(self.trie, cfg, rs.context,
@@ -170,7 +230,8 @@ class LookaheadEngine:
             pos = (cache_lens[:, None]
                    + np.stack([t.depth for t in trees])).astype(np.int32)
             mask = np.stack([t.tree_mask for t in trees])             # (B,W,W)
-            cache, chosen = fns.tree_step(cache, cache_lens, tok, pos, mask)
+            cache, chosen = fns.tree_step(cache, cache_lens, tok, pos, mask,
+                                          **lane_kw)
             chosen = np.asarray(chosen)
 
             accepted, kv_slots = verify_accept_batch(trees, chosen)
@@ -187,9 +248,12 @@ class LookaheadEngine:
 
             for b in stepped:
                 trie_stream(self.trie, cfg, states[b])
-                # safety: cache overflow → stop
-                if cache_lens[b] + W >= fns.max_seq_len:
+                # backstop: token_limit retires before overflow is possible
+                if cache_lens[b] + W >= fns.max_seq_len \
+                        and not states[b].done:
                     states[b].done = True
+                    states[b].finish_reason = \
+                        states[b].finish_reason or "cache"
 
         for rs in states:
             trie_retire(self.trie, cfg, rs.rid, prune=False)
@@ -199,13 +263,16 @@ class LookaheadEngine:
         return [rs.result() for rs in states]
 
 
-def reference_decode(fns: StepFns, prompt: Sequence[int], max_new_tokens: int,
-                     eos_id: int = -1, pad_id: int = 0) -> List[int]:
+def reference_decode(fns: StepFns, prompt: Sequence[int],
+                     max_new_tokens: Optional[int] = None,
+                     eos_id: int = -1, pad_id: int = 0,
+                     params: Optional[SamplingParams] = None) -> List[int]:
     """Plain step-by-step decoding through the *same* device functions
-    (width-1 step with an empty draft).  Ground truth for lossless tests."""
+    (width-1 step with an empty draft), honoring the request's own
+    ``SamplingParams``.  Ground truth for lossless tests."""
     cfg = LookaheadConfig(strategy="none", decoding_length=0)
     engine = LookaheadEngine(fns, cfg, eos_id=eos_id)
-    return engine.generate(prompt, max_new_tokens).tokens
+    return engine.generate(prompt, max_new_tokens, params=params).tokens
 
 
 __all__ = ["LookaheadEngine", "StepFns", "GenStats", "RequestResult",

@@ -22,13 +22,79 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .draft import BUILDERS, DraftTree, _finalize, repad
 from .strategies import LookaheadConfig
 from .trie import TrieTree
+
+
+# ----------------------------------------------------------- request surface
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation parameters (the request-centric API surface).
+
+    One co-batched scheduler run may mix greedy and sampled requests at
+    distinct temperatures/seeds: the device step takes per-lane
+    (greedy, temperature, seed) vectors as traced inputs, so honoring these
+    never retraces (I2).  Sampled streams are position-keyed off ``seed``
+    (Gumbel key = fold_in(key(seed), absolute position)), which keeps
+    losslessness (I1): the token at output position p is a pure function of
+    (seed, p, logits), independent of batching or accept granularity.
+
+    ``stop_token_ids`` behave like extra EOS ids (the stop token is kept in
+    the output).  ``stop_sequences`` are token-id subsequences matched
+    against the *generated output* host-side, token by token, AFTER each
+    multi-token accept — a tree step may verify past the match, but the
+    output is truncated to exactly what step-by-step decoding through the
+    same params would have emitted (the matched sequence is kept).
+    """
+    max_new_tokens: int = 64
+    sample: bool = False
+    temperature: float = 1.0
+    seed: int = 0
+    stop_token_ids: Tuple[int, ...] = ()
+    stop_sequences: Tuple[Tuple[int, ...], ...] = ()
+
+    def __post_init__(self):
+        # normalize list inputs so params hash/compare by value
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+        object.__setattr__(self, "stop_sequences",
+                           tuple(tuple(int(t) for t in s)
+                                 for s in self.stop_sequences))
+
+    def validate(self) -> "SamplingParams":
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens={self.max_new_tokens}: must be >= 1 (the "
+                "prefill itself emits the first token)")
+        if self.sample and self.temperature <= 0:
+            raise ValueError(
+                f"temperature={self.temperature}: sampled requests need a "
+                "positive temperature (use sample=False for greedy)")
+        for s in self.stop_sequences:
+            if not s:
+                raise ValueError("empty stop sequence (would match "
+                                 "everywhere); drop it or pass tokens")
+        return self
+
+
+@dataclass
+class Request:
+    """A serving request: prompt + params + caller metadata.
+
+    ``params=None`` means "the engine's session defaults" — resolved at
+    submit time, so the same Request object is portable across engines.
+    ``rid`` is assigned by the scheduler at submit; ``metadata`` is carried
+    through untouched (SLO tags, trace ids, ...).
+    """
+    prompt: List[int]
+    params: Optional[SamplingParams] = None
+    metadata: Dict[str, Any] = field(default_factory=dict)
+    rid: int = -1
 
 
 @dataclass
@@ -73,6 +139,23 @@ class StepFns:
     block_size: int = 0               # paged: KV rows per block
     n_blocks: Optional[int] = None    # paged: pool size (None = dense-equiv)
     reset_blocks: Optional[Callable] = None
+    # --- request-centric API extensions
+    # per_lane_params: prefill/prefill_into_slot/tree_step accept a trailing
+    # ``lane_params`` dict of (B,) device vectors {greedy, temp, seed} so one
+    # co-batched step honors mixed per-request SamplingParams without
+    # retracing.  False = legacy session-level constants only; the scheduler
+    # then rejects requests whose params deviate from ``session_defaults``.
+    per_lane_params: bool = False
+    # session-level defaults applied to requests submitted without params
+    # (max_new_tokens is a per-call override; see scheduler.submit)
+    session_defaults: Optional["SamplingParams"] = None
+    # "mixed" = per-request greedy/sample honored; "greedy" = argmax-only
+    # session (skips the sampling lane entirely — fastest pure-greedy path)
+    sampling: str = "mixed"
+
+    @property
+    def default_params(self) -> "SamplingParams":
+        return self.session_defaults or SamplingParams()
 
     @property
     def supports_slot_serving(self) -> bool:
@@ -107,6 +190,10 @@ class RequestResult:
     latency_s: float = 0.0    # submit -> finish (scheduler runs only)
     ttft_s: float = 0.0       # submit -> first token (scheduler runs only)
     queue_s: float = 0.0      # submit -> admission (scheduler runs only)
+    # why generation ended: "eos" | "stop" (stop token/sequence) | "length"
+    # (max_new_tokens) | "cache" (KV capacity) | "cancelled"
+    finish_reason: str = ""
+    cancelled: bool = False
 
 
 @dataclass
@@ -116,16 +203,60 @@ class RequestState:
     prompt: List[int]
     max_new_tokens: int
     eos_id: int = -1
+    params: Optional[SamplingParams] = None
+    # token-granular KV-capacity budget: max output tokens the cache can
+    # commit before the next tree step would scatter past max_seq_len
+    # (= max_seq_len - width - len(prompt) + 1, set by the serving loop).
+    # Retirement at this cap is per-TOKEN, so the truncation point is
+    # identical across serving disciplines regardless of how many draft
+    # tokens the final step happened to verify (the lockstep-vs-continuous
+    # overflow divergence fix).  None = no cache cap (budget/EOS only).
+    token_limit: Optional[int] = None
     output: List[int] = field(default_factory=list)
     context: List[int] = field(default_factory=list)   # prompt ⧺ output
     stats: GenStats = field(default_factory=GenStats)
     done: bool = False
+    cancelled: bool = False
+    finish_reason: str = ""
     inserted_upto: int = 0    # output tokens already streamed into the trie
     lane: int = -1            # scheduler slot currently occupied (-1 = none)
     submit_t: float = 0.0
     admit_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
+
+    @property
+    def _limit(self) -> int:
+        """Effective output-token budget: caller budget ∧ cache capacity
+        (floor 1 — the prefill emits a token without needing tree scratch)."""
+        lim = self.max_new_tokens
+        if self.token_limit is not None:
+            lim = min(lim, self.token_limit)
+        return max(lim, 1)
+
+    def _stop_reason_at(self, token: int) -> Optional[str]:
+        """Stop classification for the just-appended ``token`` (output
+        already includes it) — checked token-by-token so truncation matches
+        step-by-step decoding exactly."""
+        if token == self.eos_id:
+            return "eos"
+        p = self.params
+        if p is None:
+            return None
+        if token in p.stop_token_ids:
+            return "stop"
+        for seq in p.stop_sequences:
+            if (len(self.output) >= len(seq)
+                    and self.output[-len(seq):] == list(seq)):
+                return "stop"
+        return None
+
+    def _finish_if_exhausted(self) -> None:
+        if not self.done and len(self.output) >= self._limit:
+            self.done = True
+            self.finish_reason = ("length"
+                                  if self._limit >= self.max_new_tokens
+                                  else "cache")
 
     def start(self, first_token: int) -> None:
         """Consume the prefill's chosen root (the first output token)."""
@@ -134,39 +265,64 @@ class RequestState:
         self.context = list(self.prompt) + [first_token]
         self.stats.steps += 1
         self.stats.tokens += 1
-        if first_token == self.eos_id or self.max_new_tokens <= 1:
+        reason = self._stop_reason_at(first_token)
+        if reason:
             self.done = True
+            self.finish_reason = reason
+        self._finish_if_exhausted()
 
     def accept(self, accepted: Sequence[int], kv_slots: Sequence[int],
                n_tree_slots: int) -> List[int]:
         """Absorb one verified step; returns the KV slots to commit.
 
-        Truncates at the remaining token budget, then at EOS, exactly like
-        step-by-step decoding would — the committed prefix therefore never
+        Tokens are absorbed one at a time against the budget / cache cap /
+        EOS / stop conditions, exactly like step-by-step decoding would —
+        the committed prefix (and the truncation point) therefore never
         depends on how many draft tokens happened to verify.
         """
-        budget = self.max_new_tokens - len(self.output)
-        acc = list(accepted[:budget])
-        if self.eos_id in acc:
-            acc = acc[:acc.index(self.eos_id) + 1]
-        ks = list(kv_slots[:len(acc)])
-        self.output.extend(acc)
-        self.context.extend(acc)
+        limit = self._limit
+        n = 0
+        for t in accepted:
+            if len(self.output) >= limit:
+                break
+            t = int(t)
+            self.output.append(t)
+            self.context.append(t)
+            n += 1
+            reason = self._stop_reason_at(t)
+            if reason:
+                self.done = True
+                self.finish_reason = reason
+                break
+        ks = list(kv_slots[:n])
         self.stats.steps += 1
-        self.stats.tokens += len(acc)
-        self.stats.dropped_slots += n_tree_slots - len(ks)
-        if acc and acc[-1] == self.eos_id:
-            self.done = True
-        if len(self.output) >= self.max_new_tokens:
-            self.done = True
+        self.stats.tokens += n
+        self.stats.dropped_slots += n_tree_slots - n
+        self._finish_if_exhausted()
         return ks
+
+    def cancel(self) -> None:
+        """Mark the request cancelled (the serving loop releases its lane /
+        blocks through the regular retire path)."""
+        self.done = True
+        self.cancelled = True
+        self.finish_reason = "cancelled"
 
     def result(self) -> RequestResult:
         return RequestResult(
             tokens=self.output, stats=self.stats, rid=self.rid,
             latency_s=max(self.finish_t - self.submit_t, 0.0),
             ttft_s=max(self.first_token_t - self.submit_t, 0.0),
-            queue_s=max(self.admit_t - self.submit_t, 0.0))
+            queue_s=max(self.admit_t - self.submit_t, 0.0),
+            finish_reason=self.finish_reason, cancelled=self.cancelled)
+
+
+def cache_token_limit(max_seq_len: int, width: int, prompt_len: int) -> int:
+    """Output tokens a request can commit before the next ``width``-slot
+    tree step would scatter past ``max_seq_len``.  THE retirement bound both
+    serving loops set as ``RequestState.token_limit`` — sharing it is what
+    makes overflow truncation identical across disciplines."""
+    return max(int(max_seq_len) - int(width) - int(prompt_len) + 1, 1)
 
 
 # ------------------------------------------------------------------- drafting
@@ -221,6 +377,7 @@ def trie_retire(trie: TrieTree, cfg: LookaheadConfig, rid: int, *,
         trie.prune()
 
 
-__all__ = ["StepFns", "GenStats", "RequestResult", "RequestState",
+__all__ = ["SamplingParams", "Request", "StepFns", "GenStats",
+           "RequestResult", "RequestState", "cache_token_limit",
            "build_draft_tree", "idle_tree", "trie_admit", "trie_stream",
            "trie_retire"]

@@ -1,13 +1,20 @@
-"""Serving launcher: drive the continuous-batching scheduler (or the legacy
+"""Serving launcher: drive the request-centric serving engine (or the legacy
 lock-step loop) over an arch config with a synthetic arrival stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-        --smoke --requests 16 --lanes 4 --rate 8
+        --smoke --requests 16 --lanes 4 --rate 8 --mixed-sampling
 
 Reports throughput (tokens/s), EDL, lane occupancy and per-request latency
 percentiles (p50/p95/p99) plus time-to-first-token.  ``--rate 0`` submits
 every request at t=0 (closed-loop batch mode); a positive rate draws Poisson
 inter-arrival gaps (open-loop mode — the scheduler admits mid-flight).
+
+All engine knobs are one validated ``EngineConfig``
+(repro.serving.api.build_engine); requests are ``Request`` objects with
+per-request ``SamplingParams``: ``--mixed-sampling`` alternates greedy and
+sampled traffic (distinct temperatures/seeds) inside the same lane pool, and
+``--cancel-every N`` cancels every Nth request mid-flight through its
+``RequestHandle`` — both exercises of the production API surface.
 
 On real hardware drop --smoke to load the full config (weights from
 --ckpt-dir via training.checkpoint) onto the production mesh.
@@ -22,17 +29,32 @@ import jax
 import numpy as np
 
 from repro import configs as cfgreg
-from repro.core import LookaheadConfig, LookaheadEngine
+from repro.core import LookaheadEngine, Request, SamplingParams
 from repro.models import attention as attn_backends
 from repro.models import transformer as tx
-from repro.serving.scheduler import ContinuousScheduler
-from repro.serving.session import make_session_fns
+from repro.serving.api import EngineConfig, build_engine
 from repro.training.checkpoint import CheckpointManager
 from repro.training.data import PROFILES, SyntheticCorpus
 
 
 def _pct(xs: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def _request_params(args, i: int) -> SamplingParams:
+    """Per-request SamplingParams for request i of the synthetic stream."""
+    max_new = args.max_new if (not args.mixed or i % 2) else \
+        max(args.max_new // 4, 2)
+    if args.mixed_sampling:
+        # alternate greedy / sampled at cycling temperatures, one seed per
+        # request — a co-batched mix the per-lane param vectors must honor
+        if i % 2:
+            return SamplingParams(max_new_tokens=max_new, sample=True,
+                                  temperature=(0.5, 0.8, 1.1)[i % 3],
+                                  seed=1000 + i)
+        return SamplingParams(max_new_tokens=max_new)
+    return SamplingParams(max_new_tokens=max_new, sample=args.sample,
+                          temperature=args.temperature, seed=0)
 
 
 def main() -> None:
@@ -51,6 +73,13 @@ def main() -> None:
     ap.add_argument("--mixed", action="store_true",
                     help="mixed-length workload: alternate max_new/4 and "
                          "max_new budgets (the continuous-batching case)")
+    ap.add_argument("--mixed-sampling", action="store_true",
+                    help="mixed per-request sampling: alternate greedy and "
+                         "sampled (distinct temperatures/seeds) requests in "
+                         "the same lane pool")
+    ap.add_argument("--cancel-every", type=int, default=0,
+                    help="cancel every Nth request mid-flight through its "
+                         "RequestHandle (0 = never)")
     ap.add_argument("--prefill-len", type=int, default=128,
                     help="fixed prompt pad length (compile prefill once)")
     ap.add_argument("--decoding-length", type=int, default=32)
@@ -58,6 +87,9 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="EOS token id ending generation early (-1 = the "
+                         "arch defines none; synthetic corpora avoid one)")
     ap.add_argument("--backend", default=None,
                     choices=attn_backends.available_backends(),
                     help="attention backend for BOTH phases (registry: "
@@ -99,52 +131,58 @@ def main() -> None:
         params = state["params"]
         print(f"restored checkpoint step {step}")
 
-    la = LookaheadConfig(decoding_length=args.decoding_length,
-                         branch_length=args.branch_length,
-                         sample=args.sample, temperature=args.temperature)
     n_blocks = None
+    slots = 1 + args.decoding_length
     if args.kv_layout == "paged":
         # size the pool to the workload's worst-case footprint instead of
         # lanes * max_seq_len (the paged memory win), with the SAME formula
         # the scheduler admits by
         from repro.serving.block_allocator import worst_case_pool_blocks
         n_blocks = args.kv_blocks or worst_case_pool_blocks(
-            args.lanes, args.prefill_len, args.max_new, la.slots,
+            args.lanes, args.prefill_len, args.max_new, slots,
             cfg.max_seq_len, args.block_size)
-    fns = make_session_fns(cfg, params, sample=args.sample,
-                           temperature=args.temperature,
-                           base_key=jax.random.key(0), slots=la.slots,
-                           prefill_len=args.prefill_len,
-                           backend=args.backend,
-                           prefill_backend=args.prefill_backend,
-                           decode_backend=args.decode_backend,
-                           kv_layout=args.kv_layout,
-                           block_size=args.block_size, n_blocks=n_blocks)
+    # ---- one validated spec instead of kwargs threaded through four layers
+    ecfg = EngineConfig(
+        lanes=args.lanes, prefill_len=args.prefill_len,
+        decoding_length=args.decoding_length,
+        branch_length=args.branch_length,
+        eos_id=args.eos_id,
+        backend=args.backend, prefill_backend=args.prefill_backend,
+        decode_backend=args.decode_backend,
+        kv_layout=args.kv_layout, block_size=args.block_size,
+        n_blocks=n_blocks,
+        default_params=SamplingParams(
+            max_new_tokens=args.max_new, sample=args.sample,
+            temperature=args.temperature))
+    engine = build_engine(ecfg, cfg, params)
+
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
     prompt_cap = min(96, args.prefill_len)
-    reqs = [corpus.sample()[0][:prompt_cap] for _ in range(args.requests)]
-    budgets = [args.max_new if (not args.mixed or i % 2) else
-               max(args.max_new // 4, 2) for i in range(args.requests)]
+    reqs = [Request(prompt=corpus.sample()[0][:prompt_cap],
+                    params=_request_params(args, i),
+                    metadata={"i": i})
+            for i in range(args.requests)]
 
     if args.mode == "lockstep":
-        engine = LookaheadEngine(fns, la)
+        lock = LookaheadEngine(engine.fns, ecfg.lookahead(),
+                               eos_id=ecfg.eos_id)
         t0 = time.time()
         tok = steps = 0
         for i in range(0, len(reqs), args.lanes):
-            outs = engine.generate_batch_lockstep(
-                reqs[i:i + args.lanes], budgets[i:i + args.lanes])
+            chunk = reqs[i:i + args.lanes]
+            outs = lock.generate_batch_lockstep(
+                [r.prompt for r in chunk],
+                params=[r.params for r in chunk])
             for o in outs:
                 tok += len(o.tokens)
                 steps += o.stats.steps
         dt = time.time() - t0
         print(f"lockstep: {tok} tokens / {steps} steps "
               f"(EDL {tok/max(steps,1):.2f}) in {dt:.1f}s "
-              f"-> {tok/dt:.1f} tok/s; trie={len(engine.trie)} nodes")
+              f"-> {tok/dt:.1f} tok/s; trie={len(lock.trie)} nodes")
         return
 
     # ---------------------------------------------------- continuous serving
-    sched = ContinuousScheduler(fns, la, lanes=args.lanes,
-                                prefill_len=args.prefill_len)
     rng = np.random.RandomState(0)
     if args.rate > 0:
         gaps = rng.exponential(1.0 / args.rate, size=len(reqs))
@@ -152,28 +190,45 @@ def main() -> None:
     else:
         arrivals = np.zeros(len(reqs))
 
+    streamed = [0]          # tokens observed through handle callbacks
+    handles = []
+    cancelled = []
+
     t0 = time.time()
     nxt = 0
-    results = []
-    while nxt < len(reqs) or not sched.idle:
+    while nxt < len(reqs) or not engine.idle:
         now = time.time() - t0
         while nxt < len(reqs) and arrivals[nxt] <= now:
-            sched.submit(reqs[nxt], budgets[nxt])
+            h = engine.submit(reqs[nxt])
+            h.on_token(lambda delta: streamed.__setitem__(
+                0, streamed[0] + len(delta)))
+            handles.append(h)
+            if args.cancel_every and (nxt % args.cancel_every
+                                      == args.cancel_every - 1):
+                cancelled.append(h)
             nxt += 1
-        if sched.idle:
+        if engine.idle:
             # open-loop gap: nothing in flight, wait for the next arrival
             time.sleep(min(max(arrivals[nxt] - now, 0.0), 0.05))
             continue
-        results.extend(sched.step())
+        engine.step()
+        for h in cancelled:
+            if not h.done:
+                h.cancel()
     dt = time.time() - t0
+    results = [h.result() for h in handles]
 
-    tok = sum(len(r.tokens) for r in results)
-    steps = sum(r.stats.steps for r in results)
-    lat = [r.latency_s for r in results]
-    ttft = [r.ttft_s for r in results]
-    st = sched.stats
-    print(f"continuous: {tok} tokens / {len(results)} requests "
-          f"({st.decode_steps} device steps, EDL {tok/max(steps,1):.2f}, "
+    live = [r for r in results if not r.cancelled]
+    tok = sum(len(r.tokens) for r in live)
+    steps = sum(r.stats.steps for r in live)
+    lat = [r.latency_s for r in live]
+    ttft = [r.ttft_s for r in live]
+    st = engine.stats
+    sched = engine.scheduler
+    n_cancelled = sum(1 for r in results if r.cancelled)
+    print(f"continuous: {tok} tokens / {len(live)} requests "
+          f"({n_cancelled} cancelled, {streamed[0]} streamed deltas, "
+          f"{st.decode_steps} device steps, EDL {tok/max(steps,1):.2f}, "
           f"occupancy {st.occupancy:.2f}) in {dt:.1f}s -> {tok/dt:.1f} tok/s")
     if sched.cache is not None:
         cache_mb = sum(v.nbytes for v in sched.cache.values()) / 2**20
@@ -186,7 +241,7 @@ def main() -> None:
           f"p99 {_pct(lat, 99)*1e3:7.1f} ms")
     print(f"ttft     p50 {_pct(ttft, 50)*1e3:7.1f} ms   "
           f"p95 {_pct(ttft, 95)*1e3:7.1f} ms   "
-          f"p99 {_pct(ttft, 99)*1e3:7.1f} ms; trie={len(sched.trie)} nodes")
+          f"p99 {_pct(ttft, 99)*1e3:7.1f} ms; trie={len(engine.trie)} nodes")
 
 
 if __name__ == "__main__":

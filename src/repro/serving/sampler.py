@@ -1,15 +1,22 @@
-"""Token choice: greedy argmax or *position-keyed* sampling.
+"""Token choice: greedy argmax or *position-keyed* sampling, per lane.
 
 Lossless sampling for tree verification requires the sampled token at output
-position ``p`` to be a deterministic function of (rng_key, p, logits) —
+position ``p`` to be a deterministic function of (seed, p, logits) —
 independent of how many tokens were accepted per step.  We use Gumbel-argmax
-with a key folded on the position: ``argmax(logits/τ + gumbel(fold_in(key, p)))``.
+with a per-request key folded on the position:
+``argmax(logits/τ_b + gumbel(fold_in(key(seed_b), p)))``.
 Step-by-step decoding with the same rule produces bit-identical streams, which
 is what the lossless property tests assert.
+
+``choose_tokens_lanes`` is the request-centric entry point: the greedy flag,
+temperature and seed are (B,) device vectors — traced *inputs*, not trace
+constants — so one compiled step serves a lane pool mixing greedy and sampled
+requests at distinct temperatures without retracing (I2).  ``choose_tokens``
+keeps the legacy session-constant surface (dry-run cells, ad-hoc callers).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,4 +74,37 @@ def choose_tokens(logits: jax.Array, pred_positions: jax.Array,
     return jnp.argmax(z + gum, axis=-1).astype(jnp.int32).reshape(B, T)
 
 
-__all__ = ["choose_tokens"]
+# ------------------------------------------------------------- per-lane choice
+LaneParams = Dict[str, jax.Array]   # {"greedy": (B,) bool, "temp": (B,) f32,
+                                    #  "seed": (B,) u32}
+
+
+def choose_tokens_lanes(logits: jax.Array, pred_positions: jax.Array,
+                        lane_params: LaneParams) -> jax.Array:
+    """Per-lane token choice: lane b argmaxes when ``greedy[b]`` else
+    Gumbel-argmax samples at ``temp[b]`` with key fold_in(key(seed[b]), p).
+
+    logits (B, T, V); pred_positions (B, T) absolute output positions.
+    Returns (B, T) int32.  All lane params are traced device vectors —
+    values never retrace.  Both branches are evaluated and selected with
+    ``where`` (per-lane mixing forbids lax.cond); build the session with
+    ``sampling="greedy"`` to skip the Gumbel lane entirely.
+    """
+    arg = _sharded_argmax(logits)
+    B, T, V = logits.shape
+    seeds = lane_params["seed"]
+
+    def _lane_keys(seed, ps):                       # ps (T,)
+        base = jax.random.key(seed)
+        return jax.vmap(lambda p: jax.random.fold_in(base, p))(ps)
+
+    keys = jax.vmap(_lane_keys)(seeds, pred_positions)          # (B, T) keys
+    gum = jax.vmap(jax.vmap(
+        lambda k: jax.random.gumbel(k, (V,), jnp.float32)))(keys)
+    tau = jnp.maximum(lane_params["temp"].astype(jnp.float32), 1e-6)
+    z = logits.astype(jnp.float32) / tau[:, None, None]
+    samp = jnp.argmax(z + gum, axis=-1).astype(jnp.int32)
+    return jnp.where(lane_params["greedy"][:, None], arg, samp)
+
+
+__all__ = ["choose_tokens", "choose_tokens_lanes", "LaneParams"]

@@ -54,20 +54,25 @@ Invariants the implementation maintains (and tests assert):
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.request import (RequestResult, RequestState, StepFns,
-                                build_draft_tree, idle_tree, trie_admit,
+from repro.core.request import (Request, RequestResult, RequestState,
+                                SamplingParams, StepFns, build_draft_tree,
+                                cache_token_limit, idle_tree, trie_admit,
                                 trie_retire, trie_stream)
 from repro.core.strategies import LookaheadConfig
 from repro.core.trie import TrieTree
 from repro.core.verify import verify_accept_batch
 from repro.serving.block_allocator import BlockAllocator, demand_blocks
+
+if TYPE_CHECKING:   # avoid a load-time cycle: api.py imports the scheduler
+    from repro.serving.api import RequestHandle
 
 
 class SchedulerStats:
@@ -99,7 +104,8 @@ class ContinuousScheduler:
     def __init__(self, fns: StepFns, config: LookaheadConfig, *,
                  lanes: int, trie: Optional[TrieTree] = None,
                  eos_id: int = -1, prefill_len: Optional[int] = None,
-                 rid_start: int = 0, scrub_freed: bool = False):
+                 rid_start: int = 0, scrub_freed: bool = False,
+                 default_params: Optional[SamplingParams] = None):
         if not fns.supports_slot_serving:
             raise ValueError("StepFns lack prefill_into_slot/init_cache; "
                              "continuous batching needs per-slot admission")
@@ -131,9 +137,22 @@ class ContinuousScheduler:
         self.states: List[Optional[RequestState]] = [None] * self.lanes
         self.queue: Deque[RequestState] = deque()
         self.results: Dict[int, RequestResult] = {}
+        self.handles: Dict[int, "RequestHandle"] = {}
         self._order: List[int] = []
         self.next_rid = int(rid_start)
         self.stats = SchedulerStats(self.lanes)
+        # ---- per-lane sampling params (request-centric API): device-step
+        # inputs, refreshed at admission; idle lanes keep the session default.
+        # ``default_params`` (EngineConfig's) wins over the session-level
+        # ones baked by make_session_fns (which carry no max_new_tokens)
+        self._defaults = (default_params if default_params is not None
+                          else fns.default_params)
+        self.lane_greedy = np.full((self.lanes,), not self._defaults.sample)
+        self.lane_temp = np.full((self.lanes,), self._defaults.temperature,
+                                 dtype=np.float32)
+        self.lane_seed = np.full((self.lanes,),
+                                 np.uint32(self._defaults.seed),
+                                 dtype=np.uint32)
         # ---- paged KV layout: host-side block tables + allocator
         self.kv_layout = getattr(fns, "kv_layout", "dense")
         self.allocator: Optional[BlockAllocator] = None
@@ -193,17 +212,62 @@ class ContinuousScheduler:
             self.cache["block_tables"] = jnp.asarray(self.tables)
             self._tables_dirty = False
 
+    # ------------------------------------------------------------ lane params
+    def _set_lane_params(self, lane: int, params: SamplingParams) -> None:
+        self.lane_greedy[lane] = not params.sample
+        self.lane_temp[lane] = params.temperature
+        self.lane_seed[lane] = np.uint32(params.seed)
+
+    def _lane_params_all(self):
+        """(lanes,) per-lane sampling vectors for a full-batch device step."""
+        return {"greedy": self.lane_greedy.copy(),
+                "temp": self.lane_temp.copy(),
+                "seed": self.lane_seed.copy()}
+
+    @staticmethod
+    def _lane_params_one(params: SamplingParams):
+        """(1,) vectors for a single-lane ``prefill_into_slot``."""
+        return {"greedy": np.asarray([not params.sample]),
+                "temp": np.asarray([params.temperature], dtype=np.float32),
+                "seed": np.asarray([np.uint32(params.seed)],
+                                   dtype=np.uint32)}
+
     # ----------------------------------------------------------------- submit
     def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
-        """Queue a request; returns its request id."""
-        prompt = [int(t) for t in prompt]
+        """Queue a request under the session's default params (legacy
+        positional surface); returns its request id."""
+        params = dataclasses.replace(self._defaults,
+                                     max_new_tokens=int(max_new_tokens))
+        return self.submit_request(Request(prompt=list(prompt),
+                                           params=params)).rid
+
+    def submit_request(self, request: Request) -> "RequestHandle":
+        """Queue a ``Request`` and return its streaming ``RequestHandle``
+        (incremental token deltas, ``.result()``, ``.cancel()``)."""
+        from repro.serving.api import RequestHandle
+        params = (request.params if request.params is not None
+                  else self._defaults).validate()
+        prompt = [int(t) for t in request.prompt]
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) > self.prefill_len:
             raise ValueError(f"prompt length {len(prompt)} exceeds "
                              f"prefill_len={self.prefill_len}")
+        if params.sample and self.fns.sampling == "greedy":
+            raise ValueError(
+                "this session was built with sampling='greedy' (argmax-only"
+                " executables); rebuild with sampling='mixed' to serve "
+                "sampled requests")
+        if not self.fns.per_lane_params and (
+                params.sample != self._defaults.sample
+                or (params.sample
+                    and (params.temperature != self._defaults.temperature
+                         or params.seed != self._defaults.seed))):
+            raise ValueError(
+                "these StepFns predate per-lane sampling params; requests "
+                "must keep the session-level sample/temperature/seed")
         if self.allocator is not None:
-            demand = self._demand_blocks(len(prompt), int(max_new_tokens))
+            demand = self._demand_blocks(len(prompt), params.max_new_tokens)
             if demand > self.allocator.capacity:
                 raise ValueError(
                     f"request demands {demand} KV blocks; pool capacity is "
@@ -211,13 +275,18 @@ class ContinuousScheduler:
                     "— deadlock)")
         rid = self.next_rid
         self.next_rid += 1
+        request.rid = rid
         rs = RequestState(rid=rid, prompt=prompt,
-                          max_new_tokens=int(max_new_tokens),
-                          eos_id=self.eos_id)
+                          max_new_tokens=params.max_new_tokens,
+                          eos_id=self.eos_id, params=params,
+                          token_limit=cache_token_limit(
+                              self.fns.max_seq_len, self.width, len(prompt)))
         rs.submit_t = time.perf_counter()
         self.queue.append(rs)
         self._order.append(rid)
-        return rid
+        handle = RequestHandle(rs, self)
+        self.handles[rid] = handle
+        return handle
 
     # ------------------------------------------------------------------- loop
     def step(self) -> List[RequestResult]:
@@ -251,6 +320,7 @@ class ContinuousScheduler:
                 self.queue.popleft()
                 rs.lane = lane
                 rs.admit_t = time.perf_counter()
+                self._set_lane_params(lane, rs.params)
                 trie_admit(self.trie, self.config, rs.rid, rs.prompt)
                 toks = np.full((1, self.prefill_len), fns.pad_id,
                                dtype=np.int32)
@@ -258,8 +328,13 @@ class ContinuousScheduler:
                                                       dtype=np.int32)
                 plen = np.asarray([len(rs.prompt)], dtype=np.int32)
                 self._sync_tables()
-                self.cache, chosen = fns.prefill_into_slot(
-                    self.cache, lane, toks, plen)
+                if fns.per_lane_params:
+                    self.cache, chosen = fns.prefill_into_slot(
+                        self.cache, lane, toks, plen,
+                        lane_params=self._lane_params_one(rs.params))
+                else:
+                    self.cache, chosen = fns.prefill_into_slot(
+                        self.cache, lane, toks, plen)
                 if not self._settle(rs, int(np.asarray(chosen)[0]), lane):
                     finished.append(self._finish(rs))
         return finished
@@ -286,15 +361,19 @@ class ContinuousScheduler:
         for lane, rs in enumerate(cohort):
             rs.lane = lane
             rs.admit_t = now
+            self._set_lane_params(lane, rs.params)
             trie_admit(self.trie, self.config, rs.rid, rs.prompt)
             toks[lane, :len(rs.prompt)] = np.asarray(rs.prompt,
                                                      dtype=np.int32)
             lens[lane] = len(rs.prompt)
+        lane_kw = ({"lane_params": self._lane_params_all()}
+                   if fns.per_lane_params else {})
         if self.allocator is not None:
-            self.cache, chosen = fns.prefill(toks, lens, self.tables.copy())
+            self.cache, chosen = fns.prefill(toks, lens, self.tables.copy(),
+                                             **lane_kw)
             self._tables_dirty = False
         else:
-            self.cache, chosen = fns.prefill(toks, lens)
+            self.cache, chosen = fns.prefill(toks, lens, **lane_kw)
         chosen = np.asarray(chosen)
         finished: List[RequestResult] = []
         for lane, rs in enumerate(cohort):
@@ -309,6 +388,7 @@ class ContinuousScheduler:
         rs.start(first_token)
         rs.first_token_t = time.perf_counter()
         self.stats.admitted += 1
+        self._emit(rs, rs.output)
         if rs.done:
             trie_stream(self.trie, self.config, rs)
             return False
@@ -331,18 +411,25 @@ class ContinuousScheduler:
                + np.stack([t.depth for t in trees])).astype(np.int32)
         mask = np.stack([t.tree_mask for t in trees])                 # (B,W,W)
         self._sync_tables()
-        self.cache, chosen = fns.tree_step(self.cache, self.lens, tok, pos,
-                                           mask)
+        if fns.per_lane_params:
+            self.cache, chosen = fns.tree_step(
+                self.cache, self.lens, tok, pos, mask,
+                lane_params=self._lane_params_all())
+        else:
+            self.cache, chosen = fns.tree_step(self.cache, self.lens, tok,
+                                               pos, mask)
         chosen = np.asarray(chosen)
 
         accepted, kv_slots = verify_accept_batch(trees, chosen)
         gather = np.zeros((self.lanes, W), dtype=np.int32)
         n_acc = np.zeros((self.lanes,), dtype=np.int32)
         for l in active:
-            ks = self.states[l].accept(accepted[l], kv_slots[l],
-                                       trees[l].n_slots)
+            rs = self.states[l]
+            n_before = len(rs.output)
+            ks = rs.accept(accepted[l], kv_slots[l], trees[l].n_slots)
             gather[l, :len(ks)] = np.asarray(ks, dtype=np.int32)
             n_acc[l] = len(ks)
+            self._emit(rs, rs.output[n_before:])
         self.cache, new_lens = fns.commit(self.cache, self.lens, gather,
                                           n_acc)
         self.lens = np.asarray(new_lens, dtype=np.int32).copy()
@@ -353,10 +440,13 @@ class ContinuousScheduler:
         for l in active:
             rs = self.states[l]
             trie_stream(self.trie, cfg, rs)
-            # safety: cache overflow → stop before the next step could
-            # scatter past max_seq_len
-            if self.lens[l] + W >= fns.max_seq_len:
+            # backstop: the token-granular ``token_limit`` retires a request
+            # BEFORE the cache can overflow (cache_token_limit — shared with
+            # the lock-step loop so both retire at the same token); this
+            # device-safety check stays as a last line against a mis-set cap
+            if self.lens[l] + W >= fns.max_seq_len and not rs.done:
                 rs.done = True
+                rs.finish_reason = rs.finish_reason or "cache"
             if rs.done:
                 finished.append(self._finish(rs))
                 self.states[l] = None
@@ -383,6 +473,45 @@ class ContinuousScheduler:
         self.stats.peak_blocks = max(self.stats.peak_blocks,
                                      self.allocator.n_allocated)
 
+    # ------------------------------------------------------------- streaming
+    def _emit(self, rs: RequestState, delta: Sequence[int]) -> None:
+        """Push this step's accepted-token delta to the request's handle."""
+        if not delta:
+            return
+        h = self.handles.get(rs.rid)
+        if h is not None:
+            h._push(list(delta))
+
+    # ----------------------------------------------------------------- cancel
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request mid-flight (or while queued).
+
+        An active request leaves through the regular retire path — trie
+        elimination, block free (+ scrub under ``scrub_freed``), lane
+        release — so co-resident requests are untouched (I1 is per-request).
+        Returns False if the request already finished.
+        """
+        for i, rs in enumerate(self.queue):      # still queued: nothing held
+            if rs.rid == rid:
+                del self.queue[i]
+                rs.cancel()
+                rs.finish_t = time.perf_counter()
+                res = rs.result()
+                self.results[rid] = res
+                h = self.handles.pop(rid, None)
+                if h is not None:
+                    h._finalize(res)
+                return True
+        for lane in range(self.lanes):
+            rs = self.states[lane]
+            if rs is not None and rs.rid == rid:
+                rs.cancel()
+                self._finish(rs)
+                self.states[lane] = None
+                self.lens[lane] = 0
+                return True
+        return False
+
     # ----------------------------------------------------------------- retire
     def _finish(self, rs: RequestState) -> RequestResult:
         rs.finish_t = time.perf_counter()
@@ -408,6 +537,9 @@ class ContinuousScheduler:
         res = rs.result()
         self.results[rs.rid] = res
         self.stats.finished += 1
+        h = self.handles.pop(rs.rid, None)   # pop: a long-running server
+        if h is not None:                    # must not accrete dead handles
+            h._finalize(res)
         return res
 
 

@@ -10,6 +10,13 @@ device function is traced for exactly one shape —
 
 Without ``prefill_len`` the legacy pad-to-batch-max behaviour retraces per
 distinct prompt length.
+
+Per-request sampling (DESIGN.md §Serving API): every token-choosing member
+additionally takes a trailing ``lane_params`` dict of per-lane device vectors
+``{"greedy": (B,) bool, "temp": (B,) f32, "seed": (B,) u32}`` — traced
+*inputs*, so one executable serves a lane pool mixing greedy and sampled
+requests at distinct temperatures/seeds.  Call sites that omit it (legacy
+tests, one-shot scripts) get the session-level defaults.
 """
 from __future__ import annotations
 
@@ -19,16 +26,38 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.request import StepFns
+from repro.core.request import SamplingParams, StepFns
 from repro.models import attention as attn_backends
 from repro.models import transformer as tx
-from repro.serving.sampler import choose_tokens
+from repro.serving.sampler import choose_tokens, choose_tokens_lanes
+
+
+def _seed_from_key(base_key) -> int:
+    """Legacy ``base_key`` compat: collapse a typed PRNG key to the u32 seed
+    the per-lane mechanism derives its keys from.  XORs every key word so
+    distinct keys (e.g. fold_in/split siblings differing only in the high
+    word) keep distinct seeds; the sampled stream still changes across the
+    upgrade — only determinism-per-session is preserved, which is all the
+    lossless property needs."""
+    words = np.asarray(jax.random.key_data(base_key)).ravel()
+    return int(np.bitwise_xor.reduce(words.astype(np.uint32)))
+
+
+def _expose(wrapper: Callable, jitted: Callable) -> Callable:
+    """Give a thin python wrapper the jit introspection surface the
+    compile-once tests (and resume tooling) rely on."""
+    wrapper._cache_size = jitted._cache_size
+    wrapper._jitted = jitted
+    return wrapper
 
 
 def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                      sample: bool = False, temperature: float = 1.0,
                      base_key: Optional[jax.Array] = None,
+                     seed: Optional[int] = None,
+                     sampling: str = "mixed",
                      slots: int = 1, pad_id: int = 0,
                      prefill_len: Optional[int] = None,
                      logits_transform: Optional[Callable] = None,
@@ -47,6 +76,14 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
     ``logits_transform(logits, tokens, positions)`` optionally rewrites the
     step logits before token choice (the benchmarks' guided model) — it must
     stay a pure function of (token, position) to preserve losslessness.
+
+    ``sample`` / ``temperature`` / ``seed`` set the *session defaults* a
+    request inherits when submitted without its own ``SamplingParams``
+    (``base_key`` is the deprecated spelling of ``seed``).  ``sampling``
+    selects the token-choice lane: "mixed" (default) honors per-request
+    params via traced per-lane vectors; "greedy" compiles an argmax-only
+    session — fastest pure-greedy path, sampled requests are rejected at
+    submit.
 
     ``backend`` overrides both attention phases at once;
     ``prefill_backend`` / ``decode_backend`` override one phase (names are
@@ -79,40 +116,64 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
         raise ValueError(f"unknown kv_layout {cfg.kv_layout!r}")
     if cfg.kv_layout == "paged" and cfg.kv_block_size < 1:
         raise ValueError(f"kv_block_size={cfg.kv_block_size}")
+    if sampling not in ("mixed", "greedy"):
+        raise ValueError(f"sampling={sampling!r}: expected 'mixed' or "
+                         "'greedy'")
+    if sampling == "greedy" and sample:
+        raise ValueError("sampling='greedy' builds an argmax-only session; "
+                         "it cannot default to sample=True")
+    if seed is None:
+        seed = _seed_from_key(base_key) if base_key is not None else 0
+    defaults = SamplingParams(sample=sample, temperature=float(temperature),
+                              seed=int(seed)).validate()
 
-    choose = functools.partial(choose_tokens, sample=sample,
-                               temperature=temperature, base_key=base_key)
+    if sampling == "greedy":
+        def _choose(logits, pred_positions, lane_params):
+            del lane_params   # argmax-only session: params carry no entropy
+            return choose_tokens(logits, pred_positions)
+    else:
+        def _choose(logits, pred_positions, lane_params):
+            return choose_tokens_lanes(logits, pred_positions, lane_params)
 
-    def _choose_last(tokens, lens, last_logits):
+    def _default_lane_params(n: int):
+        return {
+            "greedy": np.full((n,), not defaults.sample),
+            "temp": np.full((n,), defaults.temperature, dtype=np.float32),
+            "seed": np.full((n,), defaults.seed, dtype=np.uint32),
+        }
+
+    def _choose_last(tokens, lens, last_logits, lane_params):
         lg = last_logits[:, None, :]
         if logits_transform is not None:
             last_tok = jnp.take_along_axis(tokens, (lens - 1)[:, None],
                                            axis=1)
             lg = logits_transform(lg, last_tok, (lens - 1)[:, None])
-        return choose(lg, lens[:, None])[:, 0]
+        return _choose(lg, lens[:, None], lane_params)[:, 0]
 
     if cfg.kv_layout == "paged":
         @jax.jit
-        def _prefill(tokens, lens, block_tables):
+        def _prefill(tokens, lens, block_tables, lane_params):
             cache = tx.init_paged_cache(cfg, tokens.shape[0], n_blocks)
             cache["block_tables"] = jnp.asarray(block_tables, jnp.int32)
             cache, last_logits = tx.prefill_paged(cfg, params, tokens, lens,
                                                   cache)
-            return cache, _choose_last(tokens, lens, last_logits)
+            return cache, _choose_last(tokens, lens, last_logits,
+                                       lane_params)
 
         @functools.partial(jax.jit, donate_argnums=(0,))
-        def _prefill_into_slot(cache, slot, tokens, lens):
+        def _prefill_into_slot(cache, slot, tokens, lens, lane_params):
             cache, last_logits = tx.prefill_into_slot_paged(
                 cfg, params, cache, slot, tokens, lens)
-            return cache, _choose_last(tokens, lens, last_logits)
+            return cache, _choose_last(tokens, lens, last_logits,
+                                       lane_params)
 
         @functools.partial(jax.jit, donate_argnums=(0,))
-        def _tree_step(cache, cache_lens, tokens, pos, mask):
+        def _tree_step(cache, cache_lens, tokens, pos, mask, lane_params):
             cache, logits = tx.tree_step_paged(cfg, params, cache,
                                                cache_lens, tokens, pos, mask)
             if logits_transform is not None:
                 logits = logits_transform(logits, tokens, pos)
-            chosen = choose(logits, pos + 1)
+            chosen = _choose(logits, pos + 1, lane_params)
             return cache, chosen
 
         @functools.partial(jax.jit, donate_argnums=(0,))
@@ -127,34 +188,55 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
         def _init_cache(lanes: int):
             return tx.init_paged_cache(cfg, lanes, n_blocks)
 
-        return StepFns(prefill=_prefill, tree_step=_tree_step,
+        def prefill(tokens, lens, block_tables, lane_params=None):
+            if lane_params is None:
+                lane_params = _default_lane_params(tokens.shape[0])
+            return _prefill(tokens, lens, block_tables, lane_params)
+
+        def prefill_into_slot(cache, slot, tokens, lens, lane_params=None):
+            if lane_params is None:
+                lane_params = _default_lane_params(tokens.shape[0])
+            return _prefill_into_slot(cache, slot, tokens, lens, lane_params)
+
+        def tree_step(cache, cache_lens, tokens, pos, mask,
+                      lane_params=None):
+            if lane_params is None:
+                lane_params = _default_lane_params(tokens.shape[0])
+            return _tree_step(cache, cache_lens, tokens, pos, mask,
+                              lane_params)
+
+        return StepFns(prefill=_expose(prefill, _prefill),
+                       tree_step=_expose(tree_step, _tree_step),
                        commit=_commit, slots=slots,
                        max_seq_len=cfg.max_seq_len, pad_id=pad_id,
                        init_cache=_init_cache,
-                       prefill_into_slot=_prefill_into_slot,
+                       prefill_into_slot=_expose(prefill_into_slot,
+                                                 _prefill_into_slot),
                        reset_slot=None, prefill_len=prefill_len,
                        kv_layout="paged", block_size=cfg.kv_block_size,
-                       n_blocks=n_blocks, reset_blocks=_reset_blocks)
+                       n_blocks=n_blocks, reset_blocks=_reset_blocks,
+                       per_lane_params=True, session_defaults=defaults,
+                       sampling=sampling)
 
     @jax.jit
-    def _prefill(tokens, lens):
+    def _prefill(tokens, lens, lane_params):
         cache = tx.init_cache(cfg, tokens.shape[0])
         cache, last_logits = tx.prefill(cfg, params, tokens, lens, cache)
-        return cache, _choose_last(tokens, lens, last_logits)
+        return cache, _choose_last(tokens, lens, last_logits, lane_params)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def _prefill_into_slot(cache, slot, tokens, lens):
+    def _prefill_into_slot(cache, slot, tokens, lens, lane_params):
         cache, last_logits = tx.prefill_into_slot(cfg, params, cache, slot,
                                                   tokens, lens)
-        return cache, _choose_last(tokens, lens, last_logits)
+        return cache, _choose_last(tokens, lens, last_logits, lane_params)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def _tree_step(cache, cache_lens, tokens, pos, mask):
+    def _tree_step(cache, cache_lens, tokens, pos, mask, lane_params):
         cache, logits = tx.tree_step(cfg, params, cache, cache_lens,
                                      tokens, pos, mask)
         if logits_transform is not None:
             logits = logits_transform(logits, tokens, pos)
-        chosen = choose(logits, pos + 1)
+        chosen = _choose(logits, pos + 1, lane_params)
         return cache, chosen
 
     @functools.partial(jax.jit, donate_argnums=(0,))
@@ -168,11 +250,31 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
     def _init_cache(lanes: int):
         return tx.init_cache(cfg, lanes)
 
-    return StepFns(prefill=_prefill, tree_step=_tree_step, commit=_commit,
+    def prefill(tokens, lens, lane_params=None):
+        if lane_params is None:
+            lane_params = _default_lane_params(tokens.shape[0])
+        return _prefill(tokens, lens, lane_params)
+
+    def prefill_into_slot(cache, slot, tokens, lens, lane_params=None):
+        if lane_params is None:
+            lane_params = _default_lane_params(tokens.shape[0])
+        return _prefill_into_slot(cache, slot, tokens, lens, lane_params)
+
+    def tree_step(cache, cache_lens, tokens, pos, mask, lane_params=None):
+        if lane_params is None:
+            lane_params = _default_lane_params(tokens.shape[0])
+        return _tree_step(cache, cache_lens, tokens, pos, mask, lane_params)
+
+    return StepFns(prefill=_expose(prefill, _prefill),
+                   tree_step=_expose(tree_step, _tree_step),
+                   commit=_commit,
                    slots=slots, max_seq_len=cfg.max_seq_len, pad_id=pad_id,
                    init_cache=_init_cache,
-                   prefill_into_slot=_prefill_into_slot,
-                   reset_slot=_reset_slot, prefill_len=prefill_len)
+                   prefill_into_slot=_expose(prefill_into_slot,
+                                             _prefill_into_slot),
+                   reset_slot=_reset_slot, prefill_len=prefill_len,
+                   per_lane_params=True, session_defaults=defaults,
+                   sampling=sampling)
 
 
 __all__ = ["make_session_fns"]
