@@ -29,8 +29,8 @@ from typing import Sequence, Tuple
 
 from benchmarks.common import (VOCAB, bench_model, emit,
                                make_dataset, make_guided_session_fns)
-from repro.core import (LookaheadConfig, LookaheadEngine, Request,
-                        SamplingParams)
+from repro.core import (DraftPolicy, LookaheadConfig, LookaheadEngine,
+                        Request, SamplingParams, reference_decode)
 from repro.serving.scheduler import ContinuousScheduler
 
 PREFILL_LEN = 64
@@ -48,12 +48,13 @@ def _mixed_params(budgets):
             for i, m in enumerate(budgets)]
 
 
-def _continuous(fns, la, prompts, specs, lanes
+def _continuous(fns, la, prompts, specs, lanes, draft_policy=None
                 ) -> Tuple[list, float, object, int]:
     """One scheduler generation; ``specs`` are per-request budgets (ints,
     legacy submit) or SamplingParams (request-centric submit)."""
     sched = ContinuousScheduler(fns, la, lanes=lanes,
-                                prefill_len=PREFILL_LEN)
+                                prefill_len=PREFILL_LEN,
+                                draft_policy=draft_policy)
     t0 = time.perf_counter()
     for p, s in zip(prompts, specs):
         if isinstance(s, SamplingParams):
@@ -69,7 +70,9 @@ def _continuous(fns, la, prompts, specs, lanes
 
 def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
         backends: Sequence[str] = ("dense",),
-        kv_layouts: Sequence[str] = ("dense",)) -> None:
+        kv_layouts: Sequence[str] = ("dense",),
+        draft_combos: Sequence[str] = ("trie", "prompt_copy",
+                                       "trie+ngram")) -> None:
     # continuous batching only differs from lock-step when a queue exists
     # behind the lane pool; keep at least a 2x oversubscription
     lanes = max(2, min(lanes, n_queries // 2))
@@ -191,6 +194,38 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
                  f"{mtok / mixed_wall:.1f} tok/s | "
                  f"{mstats.decode_steps} steps | lossless-per-params ✓")
 
+    # --- draft-source matrix (DESIGN.md §Draft sources): the same workload
+    # speculating through trie-only / prompt-copy-only / merged policies —
+    # the device step never changes, so every combination must reproduce the
+    # lock-step baseline per request AND step-by-step reference decoding
+    # (spot-checked on the first queries); only tok/s and acceptance move
+    for combo in draft_combos:
+        policy = DraftPolicy(sources=tuple(combo.split("+")))
+        src_out, src_wall, sstats, _ = _continuous(
+            fns, la, prompts, budgets, lanes, draft_policy=policy)
+        assert len(src_out) == len(lock_out)
+        for a, b in zip(lock_out, src_out):
+            assert a.tokens == b.tokens, \
+                f"draft sources {combo!r} changed an output"
+        for q in range(min(3, len(prompts))):
+            ref = reference_decode(fns, prompts[q], budgets[q])
+            assert src_out[q].tokens == ref, \
+                f"draft sources {combo!r} diverged from reference_decode " \
+                f"on query {q}"
+        stok = sum(len(o.tokens) for o in src_out)
+        drafted: dict = {}
+        accepted: dict = {}
+        for o in src_out:
+            for k, v in o.stats.source_drafted.items():
+                drafted[k] = drafted.get(k, 0) + v
+            for k, v in o.stats.source_accepted.items():
+                accepted[k] = accepted.get(k, 0) + v
+        acc = " ".join(f"{n}={accepted.get(n, 0)}/{d}"
+                       for n, d in sorted(drafted.items())) or "-"
+        emit(f"draft_sources[{combo}]", src_wall / max(stok, 1) * 1e6,
+             f"{stok / src_wall:.1f} tok/s | {sstats.decode_steps} steps | "
+             f"acc {acc} | lossless ✓")
+
 
 if __name__ == "__main__":
     import argparse
@@ -207,10 +242,14 @@ if __name__ == "__main__":
     ap.add_argument("--queries", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=96)
     ap.add_argument("--lanes", type=int, default=LANES)
+    ap.add_argument("--draft-sources", default="trie,prompt_copy,trie+ngram",
+                    help="comma-separated draft-source combinations; '+' "
+                         "merges sources within one policy")
     args = ap.parse_args()
     names = (available_backends() if args.backends == "all"
              else tuple(args.backends.split(",")))
     layouts = (("dense", "paged") if args.kv_layout == "all"
                else tuple(args.kv_layout.split(",")))
     run(n_queries=args.queries, max_new=args.max_new, lanes=args.lanes,
-        backends=names, kv_layouts=layouts)
+        backends=names, kv_layouts=layouts,
+        draft_combos=tuple(c for c in args.draft_sources.split(",") if c))

@@ -1,12 +1,22 @@
 """Paper Table 3: trie-updating procedure ablation — w/o prompt branches,
-w/o output branches, w/o pruning, w/o eliminating, vs. full lookahead."""
+w/o output branches, w/o pruning, w/o eliminating, vs. full lookahead —
+plus the draft-SOURCE matrix (DESIGN.md §Draft sources): the same serving
+run under trie-only, prompt-copy-only and trie+ngram policies, each
+asserted bit-identical to ``reference_decode`` (any source combination is
+lossless; only tok/s and per-source acceptance move).
+
+    PYTHONPATH=src python -m benchmarks.bench_table3_ablation \
+        [--draft-sources trie,prompt_copy,trie+ngram]
+"""
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Sequence, Tuple
 
-from repro.core import LookaheadConfig
+from repro.core import DraftPolicy, LookaheadConfig, reference_decode
 
-from .common import bench_model, emit, make_dataset, run_serving
+from .common import (bench_model, emit, make_dataset,
+                     make_guided_session_fns, run_serving)
 
 BASE = LookaheadConfig(strategy="hierarchical", decoding_length=32,
                        branch_length=8)
@@ -19,6 +29,11 @@ VARIANTS = {
 }
 
 
+def parse_combos(spec: str) -> Dict[str, Tuple[str, ...]]:
+    """'trie,prompt_copy,trie+ngram' -> {name: source tuple} ('+' merges)."""
+    return {c: tuple(c.split("+")) for c in spec.split(",") if c}
+
+
 def run(n_queries: int = 10, max_new: int = 48) -> None:
     cfg, params = bench_model()
     ds = make_dataset("antrag", n_queries + 4)
@@ -29,5 +44,45 @@ def run(n_queries: int = 10, max_new: int = 48) -> None:
              f"steps_compression={r.steps_compression:.2f}x edl={r.edl:.2f}")
 
 
+def run_sources(n_queries: int = 10, max_new: int = 48,
+                combos: Dict[str, Tuple[str, ...]] = None) -> None:
+    """Draft-source matrix cell: one run per source combination, outputs
+    asserted bit-identical to plain step-by-step decoding per query."""
+    combos = combos or parse_combos("trie,prompt_copy,trie+ngram")
+    cfg, params = bench_model()
+    ds = make_dataset("antrag", n_queries)
+    prompts = [p for p, _ in ds]
+    fns = make_guided_session_fns(cfg, params, phase=2, slots=BASE.slots)
+    refs = [reference_decode(fns, p, max_new) for p in prompts]
+    for name, srcs in combos.items():
+        policy = DraftPolicy(sources=srcs)
+        r = run_serving(cfg, params, BASE, ds, max_new=max_new, fns=fns,
+                        n_queries=n_queries, draft_policy=policy)
+        # losslessness: re-run outside the timed loop to compare per query
+        # (run_serving only aggregates) — same engine config, fresh trie
+        from repro.core import LookaheadEngine
+        outs = LookaheadEngine(fns, BASE,
+                               draft_policy=policy).generate_batch(
+            prompts, max_new)
+        for q, (o, ref) in enumerate(zip(outs, refs)):
+            assert o.tokens == ref, \
+                f"draft sources {srcs} changed query {q}'s output"
+        emit(f"table3/sources/{name}",
+             1e6 * r.wall_s / max(r.total_tokens, 1),
+             f"{r.tokens_per_s:.1f} tok/s | edl={r.edl:.2f} | "
+             f"acc {r.source_summary() or '-'} | lossless ✓")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--draft-sources", default="trie,prompt_copy,trie+ngram",
+                    help="comma-separated combinations; '+' merges sources "
+                         "within one policy (e.g. trie+ngram)")
+    args = ap.parse_args()
+    run(n_queries=args.queries, max_new=args.max_new)
+    run_sources(n_queries=args.queries, max_new=args.max_new,
+                combos=parse_combos(args.draft_sources))

@@ -84,6 +84,16 @@ class RunResult:
     edl: float
     total_tokens: int
     wall_s: float
+    # per-draft-source speculation telemetry aggregated over the run
+    source_drafted: Dict[str, int] = None
+    source_accepted: Dict[str, int] = None
+
+    def source_summary(self) -> str:
+        if not self.source_drafted:
+            return ""
+        return " ".join(
+            f"{name}={self.source_accepted.get(name, 0)}/{n}"
+            for name, n in sorted(self.source_drafted.items()))
 
 
 _FNS_CACHE: Dict = {}
@@ -93,7 +103,7 @@ def run_serving(cfg, params, la_cfg: LookaheadConfig, dataset, *,
                 max_new: int = 64, warm: Optional[List[List[int]]] = None,
                 n_queries: Optional[int] = None, batch: int = 1,
                 phase: Optional[int] = None, warm_with_outputs: int = 0,
-                fns=None) -> RunResult:
+                fns=None, draft_policy=None) -> RunResult:
     if fns is None:
         key = (cfg.name, id(params), phase, la_cfg.slots)
         fns = _FNS_CACHE.get(key)
@@ -104,7 +114,7 @@ def run_serving(cfg, params, la_cfg: LookaheadConfig, dataset, *,
             else:
                 fns = make_session_fns(cfg, params, slots=la_cfg.slots)
             _FNS_CACHE[key] = fns
-    eng = LookaheadEngine(fns, la_cfg)
+    eng = LookaheadEngine(fns, la_cfg, draft_policy=draft_policy)
     if warm:
         eng.warmup(warm)
     prompts = [p for p, _ in dataset][:n_queries or len(dataset)]
@@ -118,6 +128,8 @@ def run_serving(cfg, params, la_cfg: LookaheadConfig, dataset, *,
     eng.generate_batch(prompts[:batch], 4)
     t0 = time.perf_counter()
     tok = steps = 0
+    drafted: Dict[str, int] = {}
+    accepted: Dict[str, int] = {}
     for i in range(0, len(prompts), batch):
         chunk = prompts[i:i + batch]
         if len(chunk) < batch:
@@ -126,10 +138,15 @@ def run_serving(cfg, params, la_cfg: LookaheadConfig, dataset, *,
         for o in outs:
             tok += len(o.tokens)
             steps += o.stats.steps
+            for k, v in o.stats.source_drafted.items():
+                drafted[k] = drafted.get(k, 0) + v
+            for k, v in o.stats.source_accepted.items():
+                accepted[k] = accepted.get(k, 0) + v
     wall = time.perf_counter() - t0
     return RunResult(tokens_per_s=tok / wall,
                      steps_compression=tok / max(steps, 1),
-                     edl=tok / max(steps, 1), total_tokens=tok, wall_s=wall)
+                     edl=tok / max(steps, 1), total_tokens=tok, wall_s=wall,
+                     source_drafted=drafted, source_accepted=accepted)
 
 
 def make_dataset(profile: str, n: int, seed: int = 0,

@@ -5,7 +5,7 @@
 import jax
 import numpy as np
 
-from repro.core import Request, SamplingParams, reference_decode
+from repro.core import DraftPolicy, Request, SamplingParams, reference_decode
 from repro.models.transformer import TransformerConfig, init_params
 from repro.serving.api import EngineConfig, build_engine
 
@@ -55,6 +55,23 @@ def main() -> None:
     assert deltas == r_sampled.tokens        # stream == final result
     print("mixed params ✓ — greedy + sampled co-batched, both lossless; "
           f"sampled stream arrived in {r_sampled.stats.steps} deltas")
+
+    # mixed-source speculation: one request drafting from the trie, its own
+    # prompt (LLMA-style copy) AND an adaptive n-gram model, merged into one
+    # tree under per-source quotas with an adaptive per-lane budget.  Drafts
+    # are host-side and verified on device, so ANY policy stays lossless —
+    # per-source acceptance shows which generator earned its slots.
+    mixed_draft = DraftPolicy(sources=("trie", "prompt_copy", "ngram"),
+                              quotas=(16, 8, 8), adaptive=True, min_budget=4)
+    h = engine.submit(Request(prompt=prompt, params=SamplingParams(
+        max_new_tokens=64, draft=mixed_draft)))
+    out_mixed = h.result()
+    assert out_mixed.tokens == ref, "draft policy changed an output!"
+    acc = out_mixed.stats.source_acceptance()
+    print("mixed draft sources ✓ — trie+prompt_copy+ngram merged, adaptive "
+          "budget, still lossless; acceptance: "
+          + (", ".join(f"{k} {v:.0%}" for k, v in sorted(acc.items()))
+             or "no drafts placed"))
 
     # attention-backend selection: the same engine spec under the Pallas
     # tree-attention / flash-prefill kernels (compiled on TPU, interpret

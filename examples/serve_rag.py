@@ -3,6 +3,12 @@ whose trie stays warm across requests (the Alipay deployment pattern —
 paper §5.3).  RAG-profile synthetic traffic with mixed per-request sampling;
 per-request lossless check under each request's own params.
 
+RAG responses quote the reference documents already sitting in the prompt,
+so speculation here drafts through ``PromptCopySource`` (LLMA-style
+longest-suffix copy from the request's own prompt/context — per-request,
+nothing pollutes the shared trie) with the trie as secondary source under a
+small quota (DESIGN.md §Draft sources).
+
     PYTHONPATH=src python examples/serve_rag.py [--requests 12] [--lanes 2]
 """
 import argparse
@@ -10,7 +16,7 @@ import time
 
 import jax
 
-from repro.core import Request, SamplingParams, reference_decode
+from repro.core import DraftPolicy, Request, SamplingParams, reference_decode
 from repro.models.transformer import TransformerConfig, init_params
 from repro.serving.api import EngineConfig, build_engine
 from repro.training.data import PROFILES, SyntheticCorpus
@@ -27,7 +33,10 @@ def main() -> None:
                             d_ff=256, vocab_size=512, max_seq_len=768)
     params = init_params(cfg, jax.random.key(0))
     ecfg = EngineConfig(lanes=args.lanes, prefill_len=128,
-                        decoding_length=32, branch_length=12)
+                        decoding_length=32, branch_length=12,
+                        draft_policy=DraftPolicy(
+                            sources=("prompt_copy", "trie"),
+                            quotas=(24, 8)))
     engine = build_engine(ecfg, cfg, params)
 
     corpus = SyntheticCorpus(PROFILES["antrag"], 512, seed=7)
@@ -49,6 +58,7 @@ def main() -> None:
     engine.run()                       # continuous batching drains the pool
     dt = time.time() - t0
 
+    drafted, accepted = {}, {}
     for r, h in zip(requests, handles):
         o = h.result()
         ref = reference_decode(engine.fns, r.prompt, params=r.params)
@@ -58,11 +68,19 @@ def main() -> None:
         print(f"req{r.metadata['i']:03d} [{mode:>12s}]: {len(o.tokens)} "
               f"tokens in {o.stats.steps} steps (EDL {o.stats.edl:.2f}) "
               f"{status}")
+        for k, v in o.stats.source_drafted.items():
+            drafted[k] = drafted.get(k, 0) + v
+        for k, v in o.stats.source_accepted.items():
+            accepted[k] = accepted.get(k, 0) + v
     st = engine.stats
     print(f"\nserved {st.finished} requests in {dt:.1f}s "
           f"(occupancy {st.occupancy:.2f}); trie holds "
           f"{len(engine.trie)} nodes "
           f"(~{engine.trie.memory_bytes()//1024} KiB)")
+    if drafted:
+        print("draft sources (accepted/drafted): " + "   ".join(
+            f"{n} {accepted.get(n, 0)}/{d}" for n, d in sorted(
+                drafted.items())))
 
 
 if __name__ == "__main__":

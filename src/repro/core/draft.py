@@ -36,6 +36,10 @@ class DraftTree:
     tree_mask: np.ndarray   # (T, T) bool — ancestor-closure (incl. self)
     n_slots: int            # live slots (<= T), root included
     children: List[List[int]]  # adjacency (host verification walk)
+    # provenance: the draft-source name that contributed each slot (None for
+    # the root and padded slots).  Host-side only — never shipped to the
+    # device — and feeds the per-source acceptance telemetry.
+    slot_source: List[Optional[str]] = None
 
     @property
     def size(self) -> int:
@@ -43,7 +47,8 @@ class DraftTree:
 
 
 def _finalize(tokens: List[int], parent: List[int], total: int,
-              pad_id: int) -> DraftTree:
+              pad_id: int, slot_src: Optional[List[Optional[str]]] = None
+              ) -> DraftTree:
     n = len(tokens)
     assert n >= 1 and n <= total, (n, total)
     tok = np.full((total,), pad_id, dtype=np.int32)
@@ -66,27 +71,37 @@ def _finalize(tokens: List[int], parent: List[int], total: int,
     children: List[List[int]] = [[] for _ in range(total)]
     for i in range(1, n):
         children[par[i]].append(i)
+    src_full: List[Optional[str]] = [None] * total
+    if slot_src is not None:
+        for i in range(min(len(slot_src), n)):
+            src_full[i] = slot_src[i]
     return DraftTree(tokens=tok, parent=par, depth=depth, tree_mask=mask,
-                     n_slots=n, children=children)
+                     n_slots=n, children=children, slot_source=src_full)
 
 
 def build_hierarchical(root_token: int, branches: Sequence[Sequence[int]],
                        scores: Optional[Sequence[float]],
-                       decoding_length: int, pad_id: int = 0) -> DraftTree:
+                       decoding_length: int, pad_id: int = 0, *,
+                       sources: Optional[Sequence[Optional[str]]] = None
+                       ) -> DraftTree:
     """Merge shared prefixes: one slot per distinct trie node (paper §4.2.2).
 
     ``branches`` are root-paths from retrieval (may be prefixes of each
     other); insertion order respects ``scores`` (already sorted by retrieval).
     Token budget: at most ``decoding_length`` draft slots beyond the root.
+    ``sources`` optionally names the draft source of each branch; a shared
+    slot keeps the first contributor (merge order = priority).
     """
     total = 1 + decoding_length
     tokens: List[int] = [int(root_token)]
     parent: List[int] = [-1]
+    srcs: List[Optional[str]] = [None]
     # map path-prefix -> slot
     slot_of: Dict[Tuple[int, ...], int] = {(): 0}
     order = range(len(branches))
     for bi in order:
         path = tuple(int(t) for t in branches[bi])
+        tag = sources[bi] if sources is not None else None
         for d in range(len(path)):
             key = path[:d + 1]
             if key in slot_of:
@@ -99,14 +114,17 @@ def build_hierarchical(root_token: int, branches: Sequence[Sequence[int]],
             slot_of[key] = len(tokens)
             tokens.append(key[-1])
             parent.append(parent_slot)
+            srcs.append(tag)
         if len(tokens) >= total:
             break
-    return _finalize(tokens, parent, total, pad_id)
+    return _finalize(tokens, parent, total, pad_id, slot_src=srcs)
 
 
 def build_parallel(root_token: int, branches: Sequence[Sequence[int]],
                    scores: Optional[Sequence[float]],
-                   decoding_length: int, pad_id: int = 0) -> DraftTree:
+                   decoding_length: int, pad_id: int = 0, *,
+                   sources: Optional[Sequence[Optional[str]]] = None
+                   ) -> DraftTree:
     """Parallel multi-branch: no prefix merging (paper §4.2.1).
 
     Branch lists coming from trie retrieval include every prefix path; keep
@@ -114,36 +132,54 @@ def build_parallel(root_token: int, branches: Sequence[Sequence[int]],
     """
     total = 1 + decoding_length
     paths = [tuple(int(t) for t in b) for b in branches]
+    src_of: Dict[Tuple[int, ...], Optional[str]] = {}
+    if sources is not None:
+        for p, s in zip(paths, sources):
+            src_of.setdefault(p, s)
     maximal = _maximal_paths(paths)
     tokens: List[int] = [int(root_token)]
     parent: List[int] = [-1]
+    srcs: List[Optional[str]] = [None]
     for path in maximal:
+        tag = src_of.get(path)
         if len(tokens) + len(path) > total:
             path = path[: max(0, total - len(tokens))]
         prev = 0
         for t in path:
             tokens.append(t)
             parent.append(prev)
+            srcs.append(tag)
             prev = len(tokens) - 1
         if len(tokens) >= total:
             break
-    return _finalize(tokens, parent, total, pad_id)
+    return _finalize(tokens, parent, total, pad_id, slot_src=srcs)
 
 
 def build_single(root_token: int, branches: Sequence[Sequence[int]],
                  scores: Optional[Sequence[float]],
-                 decoding_length: int, pad_id: int = 0) -> DraftTree:
+                 decoding_length: int, pad_id: int = 0, *,
+                 sources: Optional[Sequence[Optional[str]]] = None
+                 ) -> DraftTree:
     """Single-branch (LLMA-style): longest/highest-score single chain."""
     total = 1 + decoding_length
-    paths = _maximal_paths([tuple(int(t) for t in b) for b in branches])
+    all_paths = [tuple(int(t) for t in b) for b in branches]
+    paths = _maximal_paths(all_paths)
     tokens: List[int] = [int(root_token)]
     parent: List[int] = [-1]
+    srcs: List[Optional[str]] = [None]
     if paths:
         best = paths[0]
+        tag = None
+        if sources is not None:
+            for p, s in zip(all_paths, sources):
+                if p == best:
+                    tag = s
+                    break
         for i, t in enumerate(best[:decoding_length]):
             tokens.append(t)
             parent.append(i)  # chain: slot i+1's parent is slot i
-    return _finalize(tokens, parent, total, pad_id)
+            srcs.append(tag)
+    return _finalize(tokens, parent, total, pad_id, slot_src=srcs)
 
 
 def repad(tree: DraftTree, total: int, pad_id: int = 0) -> DraftTree:
@@ -156,8 +192,9 @@ def repad(tree: DraftTree, total: int, pad_id: int = 0) -> DraftTree:
     if tree.size == total:
         return tree
     n = min(tree.n_slots, total)
+    src = tree.slot_source[:n] if tree.slot_source is not None else None
     return _finalize(list(tree.tokens[:n]), list(tree.parent[:n]), total,
-                     pad_id)
+                     pad_id, slot_src=src)
 
 
 def _maximal_paths(paths: Sequence[Tuple[int, ...]]) -> List[Tuple[int, ...]]:

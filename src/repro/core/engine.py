@@ -32,10 +32,11 @@ hold identically on either path.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from .draft_sources import DraftPolicy, DraftSource, TrieSource
 from .request import (GenStats, Request, RequestResult, RequestState,
                       SamplingParams, StepFns, build_draft_tree,
                       cache_token_limit, idle_tree, trie_admit, trie_retire,
@@ -84,13 +85,23 @@ def _per_request_params(fns: StepFns, n: int, max_new_tokens: Optional[MaxNew],
 
 class LookaheadEngine:
     def __init__(self, fns: StepFns, config: LookaheadConfig,
-                 eos_id: int = -1):
+                 eos_id: int = -1,
+                 draft_policy: Optional[DraftPolicy] = None):
         self.fns = fns
         self.config = config
         self.eos_id = eos_id
         self.trie = TrieTree(capacity=config.trie_capacity,
                              prompt_boost=config.prompt_boost,
                              decay=config.decay)
+        # default speculation policy for the scheduler-backed generate paths
+        # (the lock-step loop stays on the hardwired trie — it is the legacy
+        # baseline the continuous-batching benchmarks compare against).
+        # Source instances persist across generate_batch calls so adaptive
+        # sources (trie, ngram) stay warm like the trie always has.
+        self.draft_policy = (draft_policy if draft_policy is not None
+                             else DraftPolicy()).validate()
+        self._sources: Dict[str, DraftSource] = {
+            "trie": TrieSource(config, trie=self.trie)}
         self._next_request_id = 0
 
     # ------------------------------------------------------------------ warm
@@ -150,7 +161,8 @@ class LookaheadEngine:
         sched = ContinuousScheduler(
             self.fns, self.config, lanes=len(prompts), trie=self.trie,
             eos_id=self.eos_id, prefill_len=prefill_len,
-            rid_start=self._next_request_id)
+            rid_start=self._next_request_id,
+            draft_policy=self.draft_policy, sources=self._sources)
         handles = [sched.submit_request(Request(prompt=list(p), params=pp))
                    for p, pp in zip(prompts, plist)]
         sched.run()
@@ -240,7 +252,8 @@ class LookaheadEngine:
             stepped = [b for b in range(B) if not states[b].done]
             for b in stepped:
                 ks = states[b].accept(accepted[b], kv_slots[b],
-                                      trees[b].n_slots)
+                                      trees[b].n_slots,
+                                      slot_sources=trees[b].slot_source)
                 gather[b, :len(ks)] = np.asarray(ks, dtype=np.int32)
                 n_acc[b] = len(ks)
             cache, cache_lens = fns.commit(cache, cache_lens, gather, n_acc)

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .draft import BUILDERS, DraftTree, _finalize, repad
+from .draft_sources import AdaptiveBudget, DraftPolicy
 from .strategies import LookaheadConfig
 from .trie import TrieTree
 
@@ -57,6 +58,12 @@ class SamplingParams:
     seed: int = 0
     stop_token_ids: Tuple[int, ...] = ()
     stop_sequences: Tuple[Tuple[int, ...], ...] = ()
+    # speculation spec: which draft sources feed this request's trees, their
+    # quotas, the trie namespace, adaptive budget on/off.  None = the
+    # engine's default policy.  Drafts never change outputs (verification is
+    # lossless), so this knob is pure performance/isolation — it is safe to
+    # vary per request inside one lane pool.
+    draft: Optional[DraftPolicy] = None
 
     def __post_init__(self):
         # normalize list inputs so params hash/compare by value
@@ -79,6 +86,8 @@ class SamplingParams:
             if not s:
                 raise ValueError("empty stop sequence (would match "
                                  "everywhere); drop it or pass tokens")
+        if self.draft is not None:
+            self.draft.validate()
         return self
 
 
@@ -175,11 +184,24 @@ class GenStats:
     steps: int = 0
     tokens: int = 0
     dropped_slots: int = 0    # draft tokens computed but rejected
+    # per-draft-source speculation telemetry (paper Table 3-style reporting
+    # + the adaptive controller's input): how many draft tokens each source
+    # placed into trees, and how many of those the model verified.  The one
+    # free token per step (the model's own root prediction) belongs to no
+    # source, so sum(source_accepted) == tokens - steps when every slot is
+    # tagged.
+    source_drafted: Dict[str, int] = field(default_factory=dict)
+    source_accepted: Dict[str, int] = field(default_factory=dict)
 
     @property
     def edl(self) -> float:
         """Mean accepted tokens per step (paper: effective decoding length)."""
         return self.tokens / max(self.steps, 1)
+
+    def source_acceptance(self) -> Dict[str, float]:
+        """Accepted / drafted rate per source (0.0 when nothing drafted)."""
+        return {name: self.source_accepted.get(name, 0) / max(n, 1)
+                for name, n in self.source_drafted.items()}
 
 
 @dataclass
@@ -212,6 +234,11 @@ class RequestState:
     # tokens the final step happened to verify (the lockstep-vs-continuous
     # overflow divergence fix).  None = no cache cap (budget/EOS only).
     token_limit: Optional[int] = None
+    # resolved per-request speculation policy (set by the serving loop at
+    # submit; None = the loop's trie-only legacy path) and, when the policy
+    # asks for it, the per-lane adaptive draft-budget controller
+    draft: Optional[DraftPolicy] = None
+    budget_ctl: Optional[AdaptiveBudget] = None
     output: List[int] = field(default_factory=list)
     context: List[int] = field(default_factory=list)   # prompt ⧺ output
     stats: GenStats = field(default_factory=GenStats)
@@ -272,13 +299,20 @@ class RequestState:
         self._finish_if_exhausted()
 
     def accept(self, accepted: Sequence[int], kv_slots: Sequence[int],
-               n_tree_slots: int) -> List[int]:
+               n_tree_slots: int,
+               slot_sources: Optional[Sequence[Optional[str]]] = None
+               ) -> List[int]:
         """Absorb one verified step; returns the KV slots to commit.
 
         Tokens are absorbed one at a time against the budget / cache cap /
         EOS / stop conditions, exactly like step-by-step decoding would —
         the committed prefix (and the truncation point) therefore never
         depends on how many draft tokens happened to verify.
+
+        ``slot_sources`` is the tree's per-slot provenance
+        (``DraftTree.slot_source``); when given, per-source drafted/accepted
+        counters accrue on ``stats`` (slot 0 is the model's own root
+        prediction — no source gets credit for it).
         """
         limit = self._limit
         n = 0
@@ -295,9 +329,22 @@ class RequestState:
                 self.finish_reason = reason
                 break
         ks = list(kv_slots[:n])
-        self.stats.steps += 1
-        self.stats.tokens += n
-        self.stats.dropped_slots += n_tree_slots - n
+        st = self.stats
+        st.steps += 1
+        st.tokens += n
+        st.dropped_slots += n_tree_slots - n
+        if slot_sources is not None:
+            for i in range(1, n_tree_slots):
+                src = slot_sources[i]
+                if src is not None:
+                    st.source_drafted[src] = st.source_drafted.get(src, 0) + 1
+            for slot in ks[1:]:
+                src = slot_sources[slot]
+                if src is not None:
+                    st.source_accepted[src] = (
+                        st.source_accepted.get(src, 0) + 1)
+        if self.budget_ctl is not None:
+            self.budget_ctl.update(n)
         self._finish_if_exhausted()
         return ks
 
@@ -338,7 +385,8 @@ def build_draft_tree(trie: TrieTree, cfg: LookaheadConfig,
         max_prefix_len=cfg.max_prefix_len,
         min_matched_tokens=cfg.min_matched_tokens)
     tree = BUILDERS[cfg.strategy](root, branches, scores,
-                                  cfg.decoding_length, pad_id)
+                                  cfg.decoding_length, pad_id,
+                                  sources=["trie"] * len(branches))
     return repad(tree, width, pad_id)
 
 
@@ -380,4 +428,4 @@ def trie_retire(trie: TrieTree, cfg: LookaheadConfig, rid: int, *,
 __all__ = ["SamplingParams", "Request", "StepFns", "GenStats",
            "RequestResult", "RequestState", "cache_token_limit",
            "build_draft_tree", "idle_tree", "trie_admit", "trie_stream",
-           "trie_retire"]
+           "trie_retire", "DraftPolicy"]

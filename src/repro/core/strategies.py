@@ -23,6 +23,13 @@ class LookaheadConfig:
     decay: float = 0.5               # pruning frequency decay
     max_prefix_len: int = 8          # multi-stage retrieval: longest suffix tried
     min_matched_tokens: int = 2      # retry with shorter prefix below this
+    # draft-source retrieval tuning (core/draft_sources.py); which sources a
+    # request actually uses is the per-request DraftPolicy, these shape HOW
+    # each source retrieves once selected
+    copy_min_match: int = 2          # PromptCopySource: shortest suffix matched
+    copy_max_branches: int = 4       # PromptCopySource: copy sites per retrieve
+    ngram_order: int = 3             # NgramSource: max conditioning order k
+    ngram_max_entries: int = 65536   # NgramSource: count-table cap before decay
     # ablation switches (paper Table 3)
     insert_prompt: bool = True
     insert_output: bool = True

@@ -201,4 +201,74 @@ class TrieTree:
         return self._n_nodes * 220
 
 
-__all__ = ["TrieTree"]
+class TrieForest:
+    """Scenario-scoped tries under ONE shared node-capacity budget.
+
+    The paper deploys *per-scenario* tries at Alipay: co-resident tenants
+    must not cross-contaminate branch frequencies (tenant A's hot responses
+    would otherwise outrank tenant B's own continuations), but host memory
+    is still one budget.  The forest maps a namespace string to an isolated
+    ``TrieTree`` — insert / retrieve / eliminate never cross namespaces —
+    while capacity accounting sums nodes over every namespace and pruning
+    decays all of them together.
+
+    The default namespace ``""`` is THE trie of a single-tenant deployment:
+    with no other namespace ever touched, every operation is bit-identical
+    to driving that ``TrieTree`` directly (the forest adds no extra prune
+    triggers on a single tree — see ``check_capacity``).
+    """
+
+    def __init__(self, capacity: int = 1024, prompt_boost: float = 8.0,
+                 decay: float = 0.5, root: Optional[TrieTree] = None):
+        self.capacity = int(root.capacity if root is not None else capacity)
+        self.prompt_boost = float(root.prompt_boost if root is not None
+                                  else prompt_boost)
+        self.decay = float(root.decay if root is not None else decay)
+        self._tries: Dict[str, TrieTree] = {
+            "": root if root is not None else TrieTree(
+                capacity=self.capacity, prompt_boost=self.prompt_boost,
+                decay=self.decay)}
+
+    # ------------------------------------------------------------- namespaces
+    def tree(self, namespace: str = "") -> TrieTree:
+        """The namespace's trie, created on first touch.  Every namespace
+        inherits the shared capacity so the per-insert prune trigger of an
+        individual trie still bounds pathological single-tenant growth."""
+        t = self._tries.get(namespace)
+        if t is None:
+            t = self._tries[namespace] = TrieTree(
+                capacity=self.capacity, prompt_boost=self.prompt_boost,
+                decay=self.decay)
+        return t
+
+    def get(self, namespace: str = "") -> Optional[TrieTree]:
+        """The namespace's trie, or None if never touched (retrieval from an
+        unknown namespace must not create state)."""
+        return self._tries.get(namespace)
+
+    def namespaces(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._tries))
+
+    # --------------------------------------------------------------- capacity
+    def __len__(self) -> int:
+        """Total node count across every namespace (the shared budget)."""
+        return sum(len(t) for t in self._tries.values())
+
+    def prune_all(self) -> None:
+        for t in self._tries.values():
+            t.prune()
+
+    def check_capacity(self) -> None:
+        """Shared accounting: when the SUM of namespace nodes exceeds the
+        one capacity, decay-prune every namespace.  Single-namespace forests
+        skip this — ``TrieTree.insert`` already prunes at the same capacity,
+        and an extra trigger here would change the default deployment's trie
+        evolution (it must stay bit-identical to the pre-forest scheduler)."""
+        if len(self._tries) > 1 and len(self) > self.capacity:
+            self.prune_all()
+
+    def memory_bytes(self) -> int:
+        return sum(t.memory_bytes() for t in self._tries.values())
+
+
+__all__ = ["TrieTree", "TrieForest"]

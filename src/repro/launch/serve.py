@@ -22,6 +22,7 @@ On real hardware drop --smoke to load the full config (weights from
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from typing import List
 
@@ -29,7 +30,9 @@ import jax
 import numpy as np
 
 from repro import configs as cfgreg
-from repro.core import LookaheadEngine, Request, SamplingParams
+from repro.core import (DraftPolicy, LookaheadEngine, Request,
+                        SamplingParams)
+from repro.core.draft_sources import available_sources
 from repro.models import attention as attn_backends
 from repro.models import transformer as tx
 from repro.serving.api import EngineConfig, build_engine
@@ -84,6 +87,18 @@ def main() -> None:
                     help="fixed prompt pad length (compile prefill once)")
     ap.add_argument("--decoding-length", type=int, default=32)
     ap.add_argument("--branch-length", type=int, default=12)
+    ap.add_argument("--draft-sources", default="trie",
+                    help="comma-separated draft sources feeding every "
+                         "request's trees, in merge-priority order "
+                         f"(registry: {', '.join(available_sources())})")
+    ap.add_argument("--adaptive-draft", action="store_true",
+                    help="per-lane adaptive draft budget from the "
+                         "accepted-length EMA (paper §5.2 warmup/CDL)")
+    ap.add_argument("--trie-namespace-key", default=None,
+                    help="request-metadata key whose value scopes the trie "
+                         "namespace (per-scenario tries, isolated branch "
+                         "frequencies; the synthetic stream tags requests "
+                         "with 'tenant')")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.8)
@@ -115,6 +130,16 @@ def main() -> None:
     if args.kv_layout == "paged" and args.mode == "lockstep":
         raise SystemExit("--kv-layout paged requires --mode continuous "
                          "(the scheduler owns the block allocator)")
+    draft_policy = DraftPolicy(
+        sources=tuple(args.draft_sources.split(",")),
+        adaptive=args.adaptive_draft).validate()
+    if args.mode == "lockstep" and (
+            draft_policy.sources != ("trie",) or draft_policy.adaptive
+            or args.trie_namespace_key):
+        raise SystemExit("--draft-sources/--adaptive-draft/"
+                         "--trie-namespace-key require --mode continuous "
+                         "(the lock-step loop is the hardwired-trie "
+                         "baseline)")
 
     mod = cfgreg.get_arch(args.arch)
     cfg = mod.smoke_config() if args.smoke else mod.full_config()
@@ -153,15 +178,24 @@ def main() -> None:
         n_blocks=n_blocks,
         default_params=SamplingParams(
             max_new_tokens=args.max_new, sample=args.sample,
-            temperature=args.temperature))
+            temperature=args.temperature),
+        draft_policy=draft_policy)
     engine = build_engine(ecfg, cfg, params)
 
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
     prompt_cap = min(96, args.prefill_len)
     reqs = [Request(prompt=corpus.sample()[0][:prompt_cap],
                     params=_request_params(args, i),
-                    metadata={"i": i})
+                    metadata={"i": i, "tenant": f"t{i % 2}"})
             for i in range(args.requests)]
+    if args.trie_namespace_key:
+        # scenario-scoped tries: each request speculates inside the trie
+        # namespace its metadata names (per-request DraftPolicy override)
+        for r in reqs:
+            ns = str(r.metadata.get(args.trie_namespace_key, ""))
+            r.params = dataclasses.replace(
+                r.params,
+                draft=dataclasses.replace(draft_policy, namespace=ns))
 
     if args.mode == "lockstep":
         lock = LookaheadEngine(engine.fns, ecfg.lookahead(),
@@ -239,9 +273,25 @@ def main() -> None:
     print(f"latency  p50 {_pct(lat, 50)*1e3:7.1f} ms   "
           f"p95 {_pct(lat, 95)*1e3:7.1f} ms   "
           f"p99 {_pct(lat, 99)*1e3:7.1f} ms")
+    forest = engine.scheduler.sources["trie"].forest
     print(f"ttft     p50 {_pct(ttft, 50)*1e3:7.1f} ms   "
           f"p95 {_pct(ttft, 95)*1e3:7.1f} ms   "
-          f"p99 {_pct(ttft, 99)*1e3:7.1f} ms; trie={len(engine.trie)} nodes")
+          f"p99 {_pct(ttft, 99)*1e3:7.1f} ms; trie={len(forest)} nodes "
+          f"across {len(forest.namespaces())} namespace(s)")
+    # per-draft-source speculation telemetry (paper Table 3-style): how many
+    # draft tokens each source placed and how many the model verified
+    drafted: dict = {}
+    accepted: dict = {}
+    for r in results:
+        for k, v in r.stats.source_drafted.items():
+            drafted[k] = drafted.get(k, 0) + v
+        for k, v in r.stats.source_accepted.items():
+            accepted[k] = accepted.get(k, 0) + v
+    if drafted:
+        cells = [f"{name} {accepted.get(name, 0)}/{n} "
+                 f"({accepted.get(name, 0) / max(n, 1):.0%})"
+                 for name, n in sorted(drafted.items())]
+        print(f"draft sources (accepted/drafted): {'   '.join(cells)}")
 
 
 if __name__ == "__main__":

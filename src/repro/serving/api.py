@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Iterator, List, Optional, Sequence,
                     Union)
 
+from repro.core.draft_sources import DraftPolicy
 from repro.core.request import (Request, RequestResult, RequestState,
                                 SamplingParams, StepFns)
 from repro.core.strategies import LookaheadConfig
@@ -70,6 +71,10 @@ class EngineConfig:
     sampling: str = "mixed"
     # session defaults for requests submitted without their own params
     default_params: SamplingParams = field(default_factory=SamplingParams)
+    # default speculation policy (draft sources / quotas / trie namespace /
+    # adaptive budget) for requests whose params carry draft=None; purely
+    # host-side, so any policy serves on the same compiled executables
+    draft_policy: DraftPolicy = field(default_factory=DraftPolicy)
 
     @property
     def slots(self) -> int:
@@ -113,6 +118,7 @@ class EngineConfig:
                 raise ValueError(f"unknown attention backend {b!r} "
                                  f"(registry: {', '.join(names)})")
         self.default_params.validate()
+        self.draft_policy.validate()
         return self
 
 
@@ -248,7 +254,8 @@ class ServingEngine:
             fns, config.lookahead(), lanes=config.lanes,
             eos_id=config.eos_id, prefill_len=config.prefill_len,
             scrub_freed=config.scrub_freed, trie=trie,
-            default_params=config.default_params)
+            default_params=config.default_params,
+            draft_policy=config.draft_policy)
 
     # ---- request surface
     def submit(self, request: Union[Request, Sequence[int]],
@@ -311,4 +318,5 @@ def build_engine(cfg: EngineConfig, model_cfg, params, *,
 
 
 __all__ = ["EngineConfig", "RequestHandle", "ServingEngine",
-           "build_session_fns", "build_engine", "Request", "SamplingParams"]
+           "build_session_fns", "build_engine", "Request", "SamplingParams",
+           "DraftPolicy"]

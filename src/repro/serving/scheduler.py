@@ -51,6 +51,13 @@ Invariants the implementation maintains (and tests assert):
   I4  Trie bookkeeping is slot-agnostic: prompt branches are inserted at
       admission and eliminated at retirement, output branches stream in as
       tokens are accepted — identical transitions to the lock-step loop.
+
+Speculation is pluggable (DESIGN.md §Draft sources): each request's
+resolved ``DraftPolicy`` names the draft sources feeding its trees
+(default: the trie source alone — bit-identical to the old hardwired
+path), the trie namespace isolating its scenario, and whether its draft
+budget adapts to its accepted-length EMA.  All of it is host-side; the
+device ``StepFns`` and every invariant above are untouched.
 """
 from __future__ import annotations
 
@@ -62,10 +69,12 @@ from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.draft_sources import (AdaptiveBudget, DraftPolicy,
+                                      DraftSource, TrieSource,
+                                      build_draft_from_policy, make_source)
 from repro.core.request import (Request, RequestResult, RequestState,
-                                SamplingParams, StepFns, build_draft_tree,
-                                cache_token_limit, idle_tree, trie_admit,
-                                trie_retire, trie_stream)
+                                SamplingParams, StepFns, cache_token_limit,
+                                idle_tree)
 from repro.core.strategies import LookaheadConfig
 from repro.core.trie import TrieTree
 from repro.core.verify import verify_accept_batch
@@ -105,7 +114,9 @@ class ContinuousScheduler:
                  lanes: int, trie: Optional[TrieTree] = None,
                  eos_id: int = -1, prefill_len: Optional[int] = None,
                  rid_start: int = 0, scrub_freed: bool = False,
-                 default_params: Optional[SamplingParams] = None):
+                 default_params: Optional[SamplingParams] = None,
+                 draft_policy: Optional[DraftPolicy] = None,
+                 sources: Optional[Dict[str, DraftSource]] = None):
         if not fns.supports_slot_serving:
             raise ValueError("StepFns lack prefill_into_slot/init_cache; "
                              "continuous batching needs per-slot admission")
@@ -118,9 +129,17 @@ class ContinuousScheduler:
         if self.prefill_len <= 0:
             raise ValueError("prefill_len must be set (fixed prompt pad "
                              "length; compile-once admission)")
-        self.trie = trie if trie is not None else TrieTree(
-            capacity=config.trie_capacity, prompt_boost=config.prompt_boost,
-            decay=config.decay)
+        # ---- draft sources (DESIGN.md §Draft sources): requests speculate
+        # through the sources their resolved DraftPolicy names; the trie
+        # source always exists (the default policy and the compat ``trie``
+        # surface), wrapping the passed trie when one is handed over so a
+        # caller-owned trie stays warm across scheduler instances.
+        self.default_policy = (draft_policy if draft_policy is not None
+                               else DraftPolicy()).validate()
+        self.sources: Dict[str, DraftSource] = (
+            sources if sources is not None else {})
+        if "trie" not in self.sources:
+            self.sources["trie"] = TrieSource(config, trie=trie)
         if config.strategy == "none" or config.decoding_length == 0:
             self.width = 1
         else:
@@ -175,6 +194,39 @@ class ContinuousScheduler:
     @property
     def idle(self) -> bool:
         return self.n_active == 0 and not self.queue
+
+    # ---------------------------------------------------------- draft sources
+    @property
+    def trie(self) -> TrieTree:
+        """Default-namespace trie of the trie source (compat surface:
+        engine warmup, stats printing, tests)."""
+        return self.sources["trie"].trie
+
+    def _resolve_sources(self, policy: DraftPolicy) -> List[DraftSource]:
+        """The policy's source instances, instantiating registry entries on
+        first use (shared across every request of this scheduler — and, when
+        a ``sources`` dict was passed in, across schedulers)."""
+        out = []
+        for name in policy.sources:
+            src = self.sources.get(name)
+            if src is None:
+                src = self.sources[name] = make_source(name, self.config)
+            out.append(src)
+        return out
+
+    def _observe_prompt(self, rs: RequestState) -> None:
+        for src in self._resolve_sources(rs.draft):
+            src.observe_prompt(rs.rid, rs.prompt,
+                               namespace=rs.draft.namespace)
+
+    def _observe_output(self, rs: RequestState) -> None:
+        for src in self._resolve_sources(rs.draft):
+            src.observe_output(rs.rid, rs.output,
+                               namespace=rs.draft.namespace)
+
+    def _retire_sources(self, rs: RequestState) -> None:
+        for src in self._resolve_sources(rs.draft):
+            src.retire(rs.rid, namespace=rs.draft.namespace)
 
     # ------------------------------------------------------------------ paged
     def _demand_blocks(self, plen: int, max_new: int) -> int:
@@ -273,14 +325,21 @@ class ContinuousScheduler:
                     f"request demands {demand} KV blocks; pool capacity is "
                     f"{self.allocator.capacity} (it could never be admitted "
                     "— deadlock)")
+        policy = (params.draft if params.draft is not None
+                  else self.default_policy).validate()
+        self._resolve_sources(policy)   # unknown names fail at submit time
         rid = self.next_rid
         self.next_rid += 1
         request.rid = rid
         rs = RequestState(rid=rid, prompt=prompt,
                           max_new_tokens=params.max_new_tokens,
                           eos_id=self.eos_id, params=params,
+                          draft=policy,
                           token_limit=cache_token_limit(
                               self.fns.max_seq_len, self.width, len(prompt)))
+        if policy.adaptive and self.width > 1:
+            rs.budget_ctl = AdaptiveBudget.from_policy(
+                policy, min(self.config.decoding_length, self.width - 1))
         rs.submit_t = time.perf_counter()
         self.queue.append(rs)
         self._order.append(rid)
@@ -321,7 +380,7 @@ class ContinuousScheduler:
                 rs.lane = lane
                 rs.admit_t = time.perf_counter()
                 self._set_lane_params(lane, rs.params)
-                trie_admit(self.trie, self.config, rs.rid, rs.prompt)
+                self._observe_prompt(rs)
                 toks = np.full((1, self.prefill_len), fns.pad_id,
                                dtype=np.int32)
                 toks[0, :len(rs.prompt)] = np.asarray(rs.prompt,
@@ -362,7 +421,7 @@ class ContinuousScheduler:
             rs.lane = lane
             rs.admit_t = now
             self._set_lane_params(lane, rs.params)
-            trie_admit(self.trie, self.config, rs.rid, rs.prompt)
+            self._observe_prompt(rs)
             toks[lane, :len(rs.prompt)] = np.asarray(rs.prompt,
                                                      dtype=np.int32)
             lens[lane] = len(rs.prompt)
@@ -390,7 +449,7 @@ class ContinuousScheduler:
         self.stats.admitted += 1
         self._emit(rs, rs.output)
         if rs.done:
-            trie_stream(self.trie, self.config, rs)
+            self._observe_output(rs)
             return False
         self.states[lane] = rs
         self.lens[lane] = len(rs.prompt)
@@ -402,10 +461,19 @@ class ContinuousScheduler:
         if not active:
             return []
         cfg, fns, W = self.config, self.fns, self.width
-        trees = [build_draft_tree(self.trie, cfg, self.states[l].context,
-                                  fns.pad_id, W)
-                 if self.states[l] is not None else idle_tree(W, fns.pad_id)
-                 for l in range(self.lanes)]
+        trees = []
+        for l in range(self.lanes):
+            rs = self.states[l]
+            if rs is None:
+                trees.append(idle_tree(W, fns.pad_id))
+                continue
+            # adaptive lanes draft at their controller's current budget; the
+            # remaining slots ride as padding (fixed W — no retrace)
+            budget = (rs.budget_ctl.value if rs.budget_ctl is not None
+                      else None)
+            trees.append(build_draft_from_policy(
+                self._resolve_sources(rs.draft), rs.draft, cfg, rs.rid,
+                rs.context, fns.pad_id, W, budget=budget))
         tok = np.stack([t.tokens for t in trees])                     # (B,W)
         pos = (self.lens[:, None]
                + np.stack([t.depth for t in trees])).astype(np.int32)
@@ -426,7 +494,8 @@ class ContinuousScheduler:
         for l in active:
             rs = self.states[l]
             n_before = len(rs.output)
-            ks = rs.accept(accepted[l], kv_slots[l], trees[l].n_slots)
+            ks = rs.accept(accepted[l], kv_slots[l], trees[l].n_slots,
+                           slot_sources=trees[l].slot_source)
             gather[l, :len(ks)] = np.asarray(ks, dtype=np.int32)
             n_acc[l] = len(ks)
             self._emit(rs, rs.output[n_before:])
@@ -439,7 +508,7 @@ class ContinuousScheduler:
         finished: List[RequestResult] = []
         for l in active:
             rs = self.states[l]
-            trie_stream(self.trie, cfg, rs)
+            self._observe_output(rs)
             # backstop: the token-granular ``token_limit`` retires a request
             # BEFORE the cache can overflow (cache_token_limit — shared with
             # the lock-step loop so both retire at the same token); this
@@ -517,7 +586,7 @@ class ContinuousScheduler:
         rs.finish_t = time.perf_counter()
         lane = rs.lane
         rs.lane = -1
-        trie_retire(self.trie, self.config, rs.rid)
+        self._retire_sources(rs)
         if self.allocator is not None:
             # free-list first, scrub second — but always BEFORE the next
             # admission can reach the allocator, so a scrub can never hit a

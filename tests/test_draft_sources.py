@@ -1,0 +1,428 @@
+"""Draft-source registry, merger, namespaces, adaptive budget (ISSUE 5).
+
+Host-side units: DraftPolicy validation, the multi-source merger's
+quota/dedup/budget accounting, PromptCopySource / NgramSource retrieval,
+TrieSource namespace isolation under shared capacity accounting, and the
+bit-identity of the default policy's draft trees with the legacy hardwired
+path.
+
+End-to-end parity: every shipped source alone AND merged combinations
+(adaptive on and off) through the continuous scheduler equal
+``reference_decode`` bit-for-bit on both KV layouts × dense/pallas
+backends — the DraftSource layer is host-only, so I1 must be untouched by
+ANY policy.  Plus: per-source telemetry invariants and compile-once (I2)
+under mixed per-request policies.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveBudget, DraftPolicy, LookaheadConfig,
+                        NgramSource, PromptCopySource, TrieSource, TrieTree,
+                        available_sources, build_draft_from_policy,
+                        build_draft_tree, merge_branches, reference_decode)
+from repro.core.request import Request, SamplingParams
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.session import make_session_fns
+
+pytestmark = pytest.mark.draft
+
+PREFILL = 32
+SLOTS = 9
+VOCAB = 53
+
+_CFG = TransformerConfig(n_layers=1, d_model=32, n_heads=4, n_kv_heads=2,
+                         d_ff=64, vocab_size=VOCAB, max_seq_len=160)
+_PARAMS = init_params(_CFG, jax.random.key(11))
+_SESSIONS = {}
+_REFS = {}
+
+CELLS = (("dense", "dense"), ("dense", "pallas"),
+         ("paged", "dense"), ("paged", "pallas"))
+
+
+def _get_fns(layout, backend):
+    key = (layout, backend)
+    if key not in _SESSIONS:
+        _SESSIONS[key] = make_session_fns(
+            _CFG, _PARAMS, slots=SLOTS, prefill_len=PREFILL, backend=backend,
+            kv_layout=layout, block_size=16 if layout == "paged" else None)
+    return _SESSIONS[key]
+
+
+def _ref(cell, prompt, max_new):
+    key = (cell, tuple(prompt), max_new)
+    if key not in _REFS:
+        _REFS[key] = reference_decode(_get_fns(*cell), prompt, max_new)
+    return _REFS[key]
+
+
+def _la(**kw):
+    base = dict(decoding_length=SLOTS - 1, branch_length=4)
+    base.update(kw)
+    return LookaheadConfig(**base)
+
+
+def _prompts(n, seed, lo=2, hi=24):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, VOCAB - 1, size=rng.randint(lo, hi)).tolist()
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------------- registry
+def test_registry_ships_three_sources():
+    names = available_sources()
+    for required in ("trie", "prompt_copy", "ngram"):
+        assert required in names
+
+
+def test_policy_validation():
+    DraftPolicy().validate()
+    DraftPolicy(sources=("trie", "ngram"), quotas=(6, 2)).validate()
+    with pytest.raises(ValueError, match="empty"):
+        DraftPolicy(sources=()).validate()
+    with pytest.raises(ValueError, match="unknown draft source"):
+        DraftPolicy(sources=("nope",)).validate()
+    with pytest.raises(ValueError, match="duplicate"):
+        DraftPolicy(sources=("trie", "trie")).validate()
+    with pytest.raises(ValueError, match="one cap per source"):
+        DraftPolicy(sources=("trie", "ngram"), quotas=(4,)).validate()
+    with pytest.raises(ValueError, match="quota"):
+        DraftPolicy(sources=("trie",), quotas=(0,)).validate()
+    with pytest.raises(ValueError, match="min_budget"):
+        DraftPolicy(min_budget=0).validate()
+    with pytest.raises(ValueError, match="ema_alpha"):
+        DraftPolicy(ema_alpha=0.0).validate()
+
+
+def test_unknown_source_rejected_at_submit():
+    fns = _get_fns("dense", "dense")
+    sched = ContinuousScheduler(fns, _la(), lanes=1, prefill_len=PREFILL)
+    with pytest.raises(ValueError, match="unknown draft source"):
+        sched.submit_request(Request(
+            prompt=[1, 2, 3],
+            params=SamplingParams(max_new_tokens=4,
+                                  draft=DraftPolicy(sources=("bogus",)))))
+
+
+# ----------------------------------------------------- default bit-identity
+def test_default_policy_trees_bit_identical_to_legacy():
+    """The single-trie default MUST build slot-for-slot identical trees to
+    the pre-registry ``build_draft_tree`` for any trie state."""
+    rng = np.random.RandomState(3)
+    cfg = _la(decoding_length=16, branch_length=6)
+    for _ in range(50):
+        trie = TrieTree(capacity=4096)
+        src = TrieSource(cfg, trie=trie)
+        for _ in range(rng.randint(1, 25)):
+            seq = rng.randint(1, 40, size=rng.randint(2, 12)).tolist()
+            trie.insert_ngrams(
+                seq, cfg.branch_length,
+                request_id=int(rng.randint(3)) if rng.rand() < .5 else None)
+        ctx = rng.randint(1, 40, size=rng.randint(1, 20)).tolist()
+        W = 1 + cfg.decoding_length
+        a = build_draft_tree(trie, cfg, ctx, 0, W)
+        b = build_draft_from_policy([src], DraftPolicy(), cfg, 0, ctx, 0, W)
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_array_equal(a.parent, b.parent)
+        np.testing.assert_array_equal(a.tree_mask, b.tree_mask)
+        assert a.n_slots == b.n_slots
+
+
+# ------------------------------------------------------------------- sources
+def test_prompt_copy_retrieves_continuation_of_suffix_match():
+    cfg = _la(branch_length=6)
+    src = PromptCopySource(cfg)
+    # suffix [1,2,3] occurred earlier; its continuation is [4,5,6,...]
+    ctx = [9, 1, 2, 3, 4, 5, 6, 7, 8, 1, 2, 3]
+    branches, scores = src.retrieve(0, ctx, budget=8)
+    assert branches and branches[0][:4] == [4, 5, 6, 7]
+    # no earlier occurrence of any suffix -> no branches
+    assert src.retrieve(0, [1, 2, 3, 4, 5], budget=8) == ([], [])
+    # budget bounds the copied chain
+    short, _ = src.retrieve(0, ctx, budget=2)
+    assert all(len(b) <= 2 for b in short)
+
+
+def test_prompt_copy_is_per_request_state_free():
+    """Nothing a request does leaks into another request's retrievals."""
+    cfg = _la()
+    src = PromptCopySource(cfg)
+    src.observe_prompt(1, [5, 6, 7, 5, 6, 7])
+    src.observe_output(1, [5, 6, 7, 5, 6])
+    # request 2's context has no repeats -> empty regardless of request 1
+    assert src.retrieve(2, [10, 11, 12, 13], budget=8) == ([], [])
+    src.retire(1)
+
+
+def test_single_source_quota_caps_tree():
+    """A quota on a one-source policy bounds the tree like it would on the
+    merge path (regression: it used to be silently ignored)."""
+    cfg = _la(decoding_length=8, branch_length=8)
+    src = NgramSource(cfg)
+    src.observe_prompt(0, [1, 2, 3] * 8)
+    pol = DraftPolicy(sources=("ngram",), quotas=(2,))
+    tree = build_draft_from_policy([src], pol, cfg, 0, [1, 2], 0,
+                                   width=1 + cfg.decoding_length)
+    assert 1 < tree.n_slots <= 3          # root + at most the 2-slot quota
+    uncapped = build_draft_from_policy([src], DraftPolicy(sources=("ngram",)),
+                                       cfg, 0, [1, 2], 0,
+                                       width=1 + cfg.decoding_length)
+    assert uncapped.n_slots > tree.n_slots
+
+
+def test_ngram_incremental_observe_counts_once():
+    """Streaming observe_output must produce the same count table as one
+    bulk absorb of the final output (regression: the overlap window used to
+    double-count n-grams near each high-water mark)."""
+    cfg = _la(branch_length=5)
+    out = [1, 2, 3, 1, 2, 3, 1, 2, 3, 4]
+    inc = NgramSource(cfg)
+    for cut in (2, 3, 5, 6, 9, len(out)):
+        inc.observe_output(7, out[:cut])
+    bulk = NgramSource(cfg)
+    bulk._absorb(out)
+    assert inc._counts == bulk._counts
+
+
+def test_ngram_source_learns_and_continues():
+    cfg = _la(branch_length=5)
+    src = NgramSource(cfg)
+    src.observe_prompt(0, [1, 2, 3, 1, 2, 3, 1, 2, 3])
+    branches, _ = src.retrieve(0, [7, 1, 2], budget=8)
+    assert branches and branches[0][0] == 3
+    # the model adapts across requests (shared, like the trie)
+    branches2, _ = src.retrieve(99, [2, 3, 1], budget=8)
+    assert branches2 and branches2[0][0] == 2
+    # cold model -> nothing
+    assert NgramSource(cfg).retrieve(0, [1, 2, 3], budget=8) == ([], [])
+
+
+# -------------------------------------------------------------------- merger
+def test_merger_respects_quotas_budget_and_dedup():
+    per = [
+        ("a", [[1], [1, 2], [1, 2, 3], [7], [7, 8]],
+         [5.0, 4.0, 3.0, 2.0, 1.0]),
+        ("b", [[1, 2, 3, 4, 5], [9, 9, 9]], [9.0, 8.0]),
+    ]
+    branches, scores, tags = merge_branches(per, budget=6, quotas=[3, 3])
+    # total NEW tokens across merged branches == budget
+    seen = set()
+    total = 0
+    per_src = {"a": 0, "b": 0}
+    for b, t in zip(branches, tags):
+        path = tuple(b)
+        known = len(path)
+        while known > 0 and path[:known] not in seen:
+            known -= 1
+        new = len(path) - known
+        for d in range(known + 1, len(path) + 1):
+            seen.add(path[:d])
+        total += new
+        per_src[t] += new
+    assert total <= 6
+    assert per_src["a"] <= 3 and per_src["b"] <= 3
+    # b's [1,2,3,4,5] overlaps a's [1,2,3]: only its NEW tail is charged
+    assert ("b" in tags)
+    # a fully-covered branch is skipped outright
+    per2 = [("a", [[1, 2]], [1.0]), ("b", [[1, 2]], [1.0])]
+    b2, _, t2 = merge_branches(per2, budget=8, quotas=[8, 8])
+    assert t2 == ["a"]          # b's identical branch added nothing
+    # quota exhaustion stops a source but not the others
+    per3 = [("a", [[1, 2, 3, 4, 5, 6]], [1.0]), ("b", [[8, 9]], [1.0])]
+    b3, _, t3 = merge_branches(per3, budget=8, quotas=[2, 8])
+    a_new = sum(len(b) for b, t in zip(b3, t3) if t == "a")
+    assert a_new == 2 and "b" in t3
+
+
+def test_merger_interleaves_sources_round_robin():
+    per = [("a", [[1], [2], [3]], [1.0, 1.0, 1.0]),
+           ("b", [[4], [5], [6]], [1.0, 1.0, 1.0])]
+    _, _, tags = merge_branches(per, budget=4, quotas=[4, 4])
+    assert tags == ["a", "b", "a", "b"]
+
+
+# ---------------------------------------------------------- adaptive budget
+def test_adaptive_budget_warmup_growth_and_decay():
+    ctl = AdaptiveBudget(32, min_budget=4, alpha=0.5, headroom=2.0)
+    assert ctl.value == 4                     # warmup: start at the floor
+    for _ in range(10):
+        ctl.update(20)
+    assert ctl.value == 32                    # sustained acceptance -> cap
+    for _ in range(20):
+        ctl.update(1)
+    assert ctl.value == 4                     # dry steps -> back to floor
+    # clamping: floor above cap collapses to cap
+    assert AdaptiveBudget(2, min_budget=10).value == 2
+
+
+def test_adaptive_budget_from_policy():
+    pol = DraftPolicy(adaptive=True, min_budget=2, ema_alpha=1.0,
+                      headroom=1.0)
+    ctl = AdaptiveBudget.from_policy(pol, 8)
+    ctl.update(5)
+    assert ctl.value == 5
+
+
+# ---------------------------------------------------------------- namespaces
+def test_namespace_isolation_retrieval_and_eliminate():
+    """Tenant A's inserts/eliminates never perturb tenant B's retrievals."""
+    cfg = _la(decoding_length=8, branch_length=5)
+    src = TrieSource(cfg)
+    src.observe_prompt(1, [1, 2, 3, 4, 5, 6], namespace="a")
+    src.observe_prompt(2, [1, 2, 9, 9, 9, 9], namespace="b")
+    before = src.retrieve(2, [1, 2], budget=8, namespace="b")
+    # A's branches are invisible to B (and vice versa)
+    a_only = src.retrieve(1, [1, 2], budget=8, namespace="a")
+    assert a_only[0] and before[0] and a_only[0] != before[0]
+    # retiring A (eliminate + capacity check) leaves B untouched
+    src.retire(1, namespace="a")
+    assert src.retrieve(2, [1, 2], budget=8, namespace="b") == before
+    # A's prompt branches are gone from A's own namespace
+    assert src.retrieve(1, [1, 2], budget=8, namespace="a") == ([], [])
+    # unknown namespace: no state created, nothing retrieved
+    assert src.retrieve(3, [1, 2], budget=8, namespace="zz") == ([], [])
+    assert "zz" not in src.forest.namespaces()
+
+
+def test_namespace_shared_capacity_accounting():
+    """One node budget across namespaces: exceeding it decay-prunes every
+    namespace (persistent low-freq branches fall out of both tenants)."""
+    cfg = _la()
+    src = TrieSource(cfg)
+    src.forest.capacity = 40
+    for ns in ("a", "b"):
+        for s in range(6):
+            seq = [100 * (ns == "b") + 10 * s + d for d in range(6)]
+            src.forest.tree(ns).insert(seq)     # persistent, freq 1
+    assert len(src.forest) > src.forest.capacity
+    src.forest.check_capacity()
+    # freq-1 leaf chains decay to 0.5 < 1 and are pruned in BOTH namespaces
+    assert len(src.forest) == 0
+    assert set(src.forest.namespaces()) == {"", "a", "b"}
+
+
+def test_namespace_end_to_end_lossless():
+    """Per-request namespaces through the scheduler: isolated tries, shared
+    capacity, outputs still equal reference decode."""
+    fns = _get_fns("dense", "dense")
+    prompts = _prompts(4, seed=31)
+    sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL)
+    handles = []
+    for i, p in enumerate(prompts):
+        pol = DraftPolicy(namespace=f"tenant{i % 2}")
+        handles.append(sched.submit_request(Request(
+            prompt=p, params=SamplingParams(max_new_tokens=12, draft=pol))))
+    sched.run()
+    for p, h in zip(prompts, handles):
+        assert h.result().tokens == _ref(("dense", "dense"), p, 12)
+    ns = sched.sources["trie"].forest.namespaces()
+    assert "tenant0" in ns and "tenant1" in ns
+
+
+# ------------------------------------------------------------ parity suite
+POLICIES = {
+    "trie": DraftPolicy(),
+    "prompt_copy": DraftPolicy(sources=("prompt_copy",)),
+    "ngram": DraftPolicy(sources=("ngram",)),
+    "trie+ngram": DraftPolicy(sources=("trie", "ngram"), quotas=(6, 2)),
+    "all+adaptive": DraftPolicy(
+        sources=("trie", "prompt_copy", "ngram"), adaptive=True,
+        min_budget=2),
+}
+
+
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_source_parity_vs_reference_all_cells(policy_name):
+    """Each source alone and merged (± adaptive budget) is lossless on every
+    (kv layout × attention backend) cell — and all cells agree."""
+    policy = POLICIES[policy_name]
+    prompts = _prompts(3, seed=17)
+    budgets = [11, 5, 14]
+    outs = {}
+    for cell in CELLS:
+        fns = _get_fns(*cell)
+        sched = ContinuousScheduler(fns, _la(), lanes=2,
+                                    prefill_len=PREFILL,
+                                    draft_policy=policy)
+        rid_to_idx = {}
+        for i, (p, m) in enumerate(zip(prompts, budgets)):
+            h = sched.submit_request(Request(
+                prompt=p, params=SamplingParams(max_new_tokens=m)))
+            rid_to_idx[h.rid] = i
+        res = sched.run()
+        got = [None] * len(prompts)
+        for r in res:
+            i = rid_to_idx[r.rid]
+            got[i] = r.tokens
+            assert r.tokens == _ref(cell, prompts[i], budgets[i]), \
+                (policy_name, cell, i)
+        outs[cell] = got
+    baseline = outs[("dense", "dense")]
+    for cell, got in outs.items():
+        assert got == baseline, (policy_name, cell)
+
+
+def test_mixed_policies_one_pool_lossless():
+    """Different requests speculate through different sources inside ONE
+    lane pool; each stays lossless (policy is per-request, like params)."""
+    fns = _get_fns("dense", "dense")
+    prompts = _prompts(5, seed=23)
+    pols = [DraftPolicy(), DraftPolicy(sources=("prompt_copy",)),
+            DraftPolicy(sources=("ngram",)),
+            DraftPolicy(sources=("trie", "ngram")),
+            DraftPolicy(adaptive=True, min_budget=1)]
+    sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL)
+    handles = [sched.submit_request(Request(
+        prompt=p, params=SamplingParams(max_new_tokens=10, draft=pol)))
+        for p, pol in zip(prompts, pols)]
+    sched.run()
+    for p, h in zip(prompts, handles):
+        assert h.result().tokens == _ref(("dense", "dense"), p, 10)
+
+
+# ---------------------------------------------------------------- telemetry
+def test_per_source_telemetry_invariants():
+    """sum(source_accepted) == tokens - steps (one free root token per
+    step), and drafted counts cover every live tree slot."""
+    fns = _get_fns("dense", "dense")
+    prompts = _prompts(4, seed=41, lo=8, hi=24)
+    sched = ContinuousScheduler(
+        fns, _la(), lanes=2, prefill_len=PREFILL,
+        draft_policy=DraftPolicy(sources=("trie", "ngram")))
+    handles = [sched.submit_request(Request(
+        prompt=p, params=SamplingParams(max_new_tokens=16)))
+        for p in prompts]
+    sched.run()
+    any_drafted = False
+    for h in handles:
+        st = h.result().stats
+        assert sum(st.source_accepted.values()) == st.tokens - st.steps
+        for name, acc in st.source_accepted.items():
+            assert acc <= st.source_drafted.get(name, 0)
+        assert set(st.source_drafted) <= {"trie", "ngram"}
+        any_drafted = any_drafted or bool(st.source_drafted)
+        rates = st.source_acceptance()
+        assert all(0.0 <= r <= 1.0 for r in rates.values())
+    assert any_drafted
+
+
+# ------------------------------------------------------------- compile-once
+def test_compile_once_under_mixed_policies():
+    """I2: per-request draft policies (incl. adaptive budgets and merged
+    sources) are host-side only — no StepFns member retraces."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=VOCAB, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(5))
+    fresh = make_session_fns(cfg, params, slots=SLOTS, prefill_len=PREFILL)
+    for pol in POLICIES.values():
+        sched = ContinuousScheduler(fresh, _la(), lanes=2,
+                                    prefill_len=PREFILL, draft_policy=pol)
+        for p in _prompts(3, seed=7):
+            sched.submit(p, 8)
+        sched.run()
+    assert fresh.prefill._cache_size() == 1
+    assert fresh.prefill_into_slot._cache_size() == 1
+    assert fresh.tree_step._cache_size() == 1
+    assert fresh.commit._cache_size() == 1

@@ -22,7 +22,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import LookaheadConfig, reference_decode
+from repro.core import DraftPolicy, LookaheadConfig, reference_decode
 from repro.models.transformer import TransformerConfig, init_params
 from repro.serving.scheduler import ContinuousScheduler
 from repro.serving.session import make_session_fns
@@ -128,3 +128,48 @@ def test_fuzz_paged_backpressure_lossless(seed):
     for r in res:
         i = rid_to_idx[r.rid]
         assert r.tokens == _ref(cell, prompts[i], budgets[i]), (seed, i)
+
+
+# --------------------------------------------------- draft-source fuzz (I5)
+_SOURCE_COMBOS = (("trie",), ("prompt_copy",), ("ngram",),
+                  ("trie", "ngram"), ("trie", "prompt_copy", "ngram"))
+
+
+@pytest.mark.draft
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(_SOURCE_COMBOS) - 1),
+       st.integers(0, 1))
+def test_fuzz_draft_sources_lossless(seed, combo_idx, adaptive):
+    """Random workloads under random draft-source combinations, quotas,
+    namespaces and adaptive budgets: draft content is host-side only, so
+    every request must stay bit-identical to single-request greedy decode —
+    on a dense AND a paged/pallas matrix cell."""
+    rng = np.random.RandomState(seed % 2**31)
+    sources = _SOURCE_COMBOS[combo_idx]
+    quotas = ()
+    if len(sources) > 1 and rng.rand() < 0.5:
+        quotas = tuple(int(rng.randint(1, SLOTS)) for _ in sources)
+    policy = DraftPolicy(
+        sources=sources, quotas=quotas,
+        namespace="" if rng.rand() < 0.5 else f"ns{rng.randint(2)}",
+        adaptive=bool(adaptive), min_budget=int(rng.randint(1, SLOTS)))
+    n_req = int(rng.randint(1, 5))
+    prompts = [rng.randint(1, VOCAB - 1,
+                           size=rng.randint(1, PREFILL - 4)).tolist()
+               for _ in range(n_req)]
+    budgets = [int(rng.randint(1, 16)) for _ in range(n_req)]
+    lanes = int(rng.randint(1, 3))
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
+    for cell in (("dense", "dense", 0), ("paged", "pallas", 8)):
+        fns = _get_fns(*cell)
+        sched = ContinuousScheduler(fns, la, lanes=lanes,
+                                    prefill_len=PREFILL,
+                                    draft_policy=policy)
+        rid_to_idx = {sched.submit(p, m): i
+                      for i, (p, m) in enumerate(zip(prompts, budgets))}
+        res = sched.run()
+        assert len(res) == n_req
+        for r in res:
+            i = rid_to_idx[r.rid]
+            assert r.tokens == _ref(cell, prompts[i], budgets[i]), \
+                (cell, seed, sources, i)
