@@ -48,13 +48,17 @@ def _mixed_params(budgets):
             for i, m in enumerate(budgets)]
 
 
-def _continuous(fns, la, prompts, specs, lanes, draft_policy=None
+def _continuous(fns, la, prompts, specs, lanes, draft_policy=None,
+                overlap=False, record_breakdown=False
                 ) -> Tuple[list, float, object, int]:
     """One scheduler generation; ``specs`` are per-request budgets (ints,
-    legacy submit) or SamplingParams (request-centric submit)."""
+    legacy submit) or SamplingParams (request-centric submit).  Returns the
+    scheduler itself so callers can read stats AND per-step breakdowns."""
     sched = ContinuousScheduler(fns, la, lanes=lanes,
                                 prefill_len=PREFILL_LEN,
-                                draft_policy=draft_policy)
+                                draft_policy=draft_policy,
+                                overlap_drafts=overlap,
+                                record_breakdown=record_breakdown)
     t0 = time.perf_counter()
     for p, s in zip(prompts, specs):
         if isinstance(s, SamplingParams):
@@ -65,7 +69,7 @@ def _continuous(fns, la, prompts, specs, lanes, draft_policy=None
     wall = time.perf_counter() - t0
     cache_bytes = sum(v.nbytes for v in sched.cache.values()) \
         if sched.cache is not None else 0
-    return out, wall, sched.stats, cache_bytes
+    return out, wall, sched, cache_bytes
 
 
 def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
@@ -128,8 +132,9 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
                     n_blocks=paged_blocks if layout == "paged" else None)
             warm, _, _, _ = _continuous(fns_b, la, prompts[:lanes],
                                         [4] * lanes, lanes)  # compile warmup
-            cont_out, cont_wall, stats, cache_bytes = _continuous(
+            cont_out, cont_wall, sched, cache_bytes = _continuous(
                 fns_b, la, prompts, budgets, lanes)
+            stats = sched.stats
             cont_tok = sum(len(o.tokens) for o in cont_out)
             layout_bytes[layout] = cache_bytes
 
@@ -182,8 +187,9 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
                     kv_layout=layout,
                     block_size=BLOCK_SIZE if layout == "paged" else None,
                     n_blocks=paged_blocks if layout == "paged" else None)
-            mixed_out, mixed_wall, mstats, _ = _continuous(
+            mixed_out, mixed_wall, msched, _ = _continuous(
                 fns_b, la, prompts, plist, lanes)
+            mstats = msched.stats
             for a, b in zip(mixed_lock, mixed_out):
                 assert a.tokens == b.tokens, \
                     f"mixed sampling: kv_layout {layout!r} / backend " \
@@ -201,8 +207,9 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
     # (spot-checked on the first queries); only tok/s and acceptance move
     for combo in draft_combos:
         policy = DraftPolicy(sources=tuple(combo.split("+")))
-        src_out, src_wall, sstats, _ = _continuous(
+        src_out, src_wall, ssched, _ = _continuous(
             fns, la, prompts, budgets, lanes, draft_policy=policy)
+        sstats = ssched.stats
         assert len(src_out) == len(lock_out)
         for a, b in zip(lock_out, src_out):
             assert a.tokens == b.tokens, \
@@ -227,6 +234,87 @@ def run(n_queries: int = 24, max_new: int = 96, lanes: int = LANES,
              f"acc {acc} | lossless ✓")
 
 
+def run_breakdown(n_queries: int = 16, max_new: int = 48, lanes: int = LANES,
+                  json_out: str = None) -> dict:
+    """``--breakdown``: per-step latency split for the fused single-sync
+    decode step — host draft-building / device step / accept+commit /
+    host work hidden inside the device flight window — serial vs
+    ``overlap_drafts``, on both KV layouts.
+
+    Asserts (a) outputs bit-identical between the two modes, (b) exactly
+    ONE host sync per decode step in both (the packed accept array is the
+    only device->host transfer on the hot path).  Emits CSV lines and
+    optionally a JSON document (the BENCH trajectory seed).
+    """
+    import json
+
+    lanes = max(2, min(lanes, n_queries // 2))
+    cfg, params = bench_model()
+    la = LookaheadConfig(decoding_length=16, branch_length=8)
+    ds = make_dataset("antrag", n_queries, prompt_cap=PREFILL_LEN - 8)
+    prompts = [p for p, _ in ds]
+    budgets = [max_new if i % 2 else max(max_new // 8, 2)
+               for i in range(len(prompts))]
+    from repro.serving.block_allocator import demand_blocks
+    paged_blocks = 1 + lanes * demand_blocks(PREFILL_LEN, max_new, la.slots,
+                                             cfg.max_seq_len, BLOCK_SIZE)
+    doc = {"bench": "continuous_batch_breakdown", "queries": n_queries,
+           "max_new": max_new, "lanes": lanes,
+           "slots": la.slots, "cells": {}}
+    for layout in ("dense", "paged"):
+        fns_b = make_guided_session_fns(
+            cfg, params, phase=2, slots=la.slots, prefill_len=PREFILL_LEN,
+            kv_layout=layout,
+            block_size=BLOCK_SIZE if layout == "paged" else None,
+            n_blocks=paged_blocks if layout == "paged" else None)
+        outs = {}
+        visible = {}
+        for mode, overlap in (("serial", False), ("overlap", True)):
+            _continuous(fns_b, la, prompts[:lanes], [4] * lanes, lanes,
+                        overlap=overlap)                    # compile warmup
+            out, wall, sched, _ = _continuous(fns_b, la, prompts, budgets,
+                                              lanes, overlap=overlap,
+                                              record_breakdown=True)
+            st = sched.stats
+            assert st.decode_syncs == st.decode_steps, (layout, mode)
+            br = st.breakdown()
+            outs[mode] = [o.tokens for o in out]
+            # host time the device stream actually waits on per step: draft
+            # building + accept/commit (overlap additionally reports the
+            # bookkeeping it moved INTO the flight window as hidden ms)
+            visible[mode] = br["host_draft_ms"] + br["accept_commit_ms"]
+            tok = sum(len(t) for t in outs[mode])
+            cell = {
+                "decode_steps": st.decode_steps,
+                "syncs_per_step": br["syncs_per_step"],
+                "host_draft_ms": round(br["host_draft_ms"], 4),
+                "device_step_ms": round(br["device_step_ms"], 4),
+                "accept_commit_ms": round(br["accept_commit_ms"], 4),
+                "hidden_host_ms": round(br["hidden_host_ms"], 4),
+                "visible_host_ms": round(visible[mode], 4),
+                "tokens_per_s": round(tok / wall, 2),
+                "steps": sched.step_breakdown[:200],
+            }
+            doc["cells"][f"{layout}/{mode}"] = cell
+            step_ms = (br["host_draft_ms"] + br["device_step_ms"]
+                       + br["accept_commit_ms"])
+            emit(f"step_breakdown[{layout}/{mode}]", step_ms * 1e3,
+                 f"draft {br['host_draft_ms']:.2f} ms | "
+                 f"device {br['device_step_ms']:.2f} ms | "
+                 f"accept {br['accept_commit_ms']:.2f} ms | "
+                 f"hidden {br['hidden_host_ms']:.2f} ms | "
+                 f"{br['syncs_per_step']:.1f} sync/step")
+        assert outs["serial"] == outs["overlap"], layout   # bit-identical
+        emit(f"overlap_host_ms[{layout}]", 0.0,
+             f"visible {visible['serial']:.2f} -> {visible['overlap']:.2f} "
+             "ms/step | lossless ✓")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {json_out}")
+    return doc
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -245,7 +333,18 @@ if __name__ == "__main__":
     ap.add_argument("--draft-sources", default="trie,prompt_copy,trie+ngram",
                     help="comma-separated draft-source combinations; '+' "
                          "merges sources within one policy")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="per-step latency breakdown (host draft / device "
+                         "step / accept+commit / hidden), serial vs "
+                         "--overlap-drafts, instead of the throughput sweep")
+    ap.add_argument("--json-out", default=None,
+                    help="with --breakdown: write the per-step records and "
+                         "per-cell means to this JSON file")
     args = ap.parse_args()
+    if args.breakdown:
+        run_breakdown(n_queries=args.queries, max_new=args.max_new,
+                      lanes=args.lanes, json_out=args.json_out)
+        raise SystemExit(0)
     names = (available_backends() if args.backends == "all"
              else tuple(args.backends.split(",")))
     layouts = (("dense", "paged") if args.kv_layout == "all"

@@ -44,10 +44,20 @@ def smoke_config(base: tx.TransformerConfig) -> tx.TransformerConfig:
 
 
 def _serve_fn(cfg: tx.TransformerConfig):
-    def serve_step(params, cache, cache_lens, tokens, pos, mask):
+    # The serving hot path is the FUSED step (one dispatch per decode step,
+    # DESIGN.md §Step pipeline): forward + token choice + device accept walk
+    # + KV commit, returning only the packed (B, 1+2T) accept array — the
+    # (B,T,V) logits never leave the chip, so the cell's lowered module and
+    # its roofline accounting match what serving actually dispatches.
+    def serve_step(params, cache, cache_lens, tokens, pos, mask,
+                   parent, n_live):
         cache, logits = tx.tree_step(cfg, params, cache, cache_lens, tokens,
                                      pos, mask)
-        return cache, choose_tokens(logits, pos + 1)
+        chosen = choose_tokens(logits, pos + 1)
+        n_acc, acc_tok, kv_slots = tx.verify_accept_device(tokens, parent,
+                                                           n_live, chosen)
+        cache, _ = tx.commit_cache(cache, cache_lens, kv_slots, n_acc)
+        return cache, tx.pack_step_result(n_acc, acc_tok, kv_slots)
     return serve_step
 
 
@@ -181,10 +191,12 @@ def build_cell(arch: str, base: tx.TransformerConfig, shape: str,
         else:
             cache_axes = tx.cache_logical_axes(cfg)
         args = (params, cache, sds((B,), jnp.int32), sds((B, T), jnp.int32),
-                sds((B, T), jnp.int32), sds((B, T, T), jnp.bool_))
+                sds((B, T), jnp.int32), sds((B, T, T), jnp.bool_),
+                sds((B, T), jnp.int32), sds((B,), jnp.int32))
         axes = (tx.param_logical_axes(cfg), cache_axes,
                 ("batch",), ("batch", None), ("batch", None),
-                ("batch", None, None))
+                ("batch", None, None),
+                ("batch", None), ("batch",))       # draft parents, n_live
         meta = _meta(cfg, tokens_per_step=B * T, kind="decode",
                      seq=cfg.max_seq_len, batch=B)
         # §Perf iteration 1 (decode): serve weights are bf16 and fit at
@@ -213,9 +225,15 @@ def _meta(cfg: tx.TransformerConfig, tokens_per_step: int, kind: str,
     # analytic TPU-facing HBM floor (XLA CPU legalizes bf16->f32 and inflates
     # cost_analysis bytes ~3-5x — measured; see EXPERIMENTS.md §Dry-run):
     if kind == "decode":
+        # fused step: the dispatch's only output besides the (donated) cache
+        # is the packed (B, 1+2T) i32 accept array — the (B,T,V) logits are
+        # consumed on-chip by the fused choose+accept epilogue (a reduction
+        # over V the compiler can stream out of the unembed matmul), so the
+        # floor charges the packed output where it used to charge logits.
+        step_out = batch * (1 + 2 * T) * 4
         floor = (n * 2                                  # weight stream (bf16)
                  + L * 2 * K * dh * seq * batch * 2     # KV cache read
-                 + batch * T * V * 4                    # logits f32
+                 + step_out                             # packed accept out
                  + L * batch * T * d * 2 * 10)          # residual stream
     elif kind == "prefill":
         floor = (n * 2
@@ -239,4 +257,9 @@ def _meta(cfg: tx.TransformerConfig, tokens_per_step: int, kind: str,
         "weight_bytes": (n if kind != "train" else na) * (4 if kind == "train" else 2),
         "kv_bytes_per_step": (cfg.n_layers * 2 * cfg.n_kv_heads * cfg.dh
                               * seq * batch * 2 if kind == "decode" else 0),
+        # bytes the step actually hands back across the dispatch boundary:
+        # decode = the packed accept array (fused step), prefill = the
+        # chosen roots; the old unfused decode figure was B*T*V*4 logits
+        "step_output_bytes": (batch * (1 + 2 * T) * 4 if kind == "decode"
+                              else batch * 4 if kind == "prefill" else 0),
     }

@@ -116,6 +116,16 @@ class StepFns:
         -> (cache, chosen(B,T) i32)
     commit(cache, cache_lens(B,), gather_idx(B,T), n_accept(B,))
         -> (cache, new_lens(B,))
+    fused_step(cache, cache_lens(B,), tokens(B,T), pos(B,T), mask(B,T,T),
+               parent(B,T), n_live(B,)) -> (cache, packed(B, 1+2T) i32)
+        — optional single-dispatch decode step: tree forward + token choice
+        + device accept walk + commit, returning one packed array
+        ``[n_acc | acc_tokens(T) | kv_slots(T)]`` per lane instead of
+        logits/chosen crossing the host boundary (DESIGN.md §Step
+        pipeline).  ``n_live`` is the lane's live draft-slot count
+        (0 = idle placeholder lane, accepts nothing).  The scheduler
+        prefers it when present; ``tree_step``/``commit`` stay as the
+        unfused parity oracle and the lock-step loop's surface.
 
     Slot-serving extensions (optional; required by ContinuousScheduler):
 
@@ -140,6 +150,7 @@ class StepFns:
     slots: int            # T = 1 + decoding_length
     max_seq_len: int
     pad_id: int = 0
+    fused_step: Optional[Callable] = None
     init_cache: Optional[Callable] = None
     prefill_into_slot: Optional[Callable] = None
     reset_slot: Optional[Callable] = None
@@ -192,6 +203,14 @@ class GenStats:
     # tagged.
     source_drafted: Dict[str, int] = field(default_factory=dict)
     source_accepted: Dict[str, int] = field(default_factory=dict)
+    # per-step latency breakdown (scheduler runs only): batch-level step
+    # time apportioned to this request over its decode steps.  host_syncs
+    # counts device->host pulls attributed to it (fused path: exactly one
+    # per decode step it participated in).
+    host_draft_ms: float = 0.0     # draft build + tree packing per step
+    device_step_ms: float = 0.0    # dispatch -> packed result on host
+    accept_commit_ms: float = 0.0  # accept bookkeeping + retire + tables
+    host_syncs: int = 0
 
     @property
     def edl(self) -> float:

@@ -63,21 +63,27 @@ def render(results: Dict) -> str:
 
     out.append("\n### Roofline (single-pod 16×16, 256 chips; per-step)\n")
     out.append("| arch | shape | compute | memory(floor) | memory(raw*) | "
-               "collective | bottleneck | useful-flops ratio | roofline frac |")
-    out.append("|---|---|---:|---:|---:|---:|---|---:|---:|")
+               "collective | step-out† | bottleneck | useful-flops ratio | "
+               "roofline frac |")
+    out.append("|---|---|---:|---:|---:|---:|---:|---|---:|---:|")
     for k, v in single.items():
         if not v.get("ok"):
             continue
         r = v["roofline"]
         ufr = r.get("useful_flops_ratio")
         rff = r.get("roofline_fraction")
+        sob = r.get("step_output_bytes")
         out.append(
             f"| {v['arch']} | {v['shape']} | {fmt_s(r['compute_s'])} | "
             f"{fmt_s(r['memory_s'])} | {fmt_s(r.get('memory_raw_s', 0))} | "
             f"{fmt_s(r['collective_s'])} | "
+            f"{'' if sob is None else fmt_b(sob)} | "
             f"{r['bottleneck']} | "
             f"{'' if ufr is None else f'{ufr:.3f}'} | "
             f"{'' if rff is None else f'{rff:.4f}'} |")
+    out.append("\n† dispatch-boundary output per step: decode cells hand "
+               "back the fused step's packed (B,1+2T) accept array — the "
+               "(B,T,V) logits never leave the chip.")
 
     out.append("\n#### Collective breakdown (single-pod; per-chip bytes/step)\n")
     out.append("| arch | shape | all-reduce | all-gather | reduce-scatter | "

@@ -149,6 +149,10 @@ def roofline(cost: Dict, hlo_text: str, n_chips: int,
         "collective_by_kind": per_kind,
         "n_chips": n_chips,
     }
+    if meta and meta.get("step_output_bytes"):
+        # dispatch-boundary output (decode: the fused step's packed accept
+        # array — NOT (B,T,V) logits; those never leave the chip)
+        out["step_output_bytes"] = float(meta["step_output_bytes"])
     if meta and meta.get("model_flops"):
         model_flops_per_chip = meta["model_flops"] / n_chips
         out["model_flops_total"] = meta["model_flops"]

@@ -83,6 +83,11 @@ def main() -> None:
     ap.add_argument("--cancel-every", type=int, default=0,
                     help="cancel every Nth request mid-flight through its "
                          "RequestHandle (0 = never)")
+    ap.add_argument("--overlap-drafts", action="store_true",
+                    help="overlap host work with the in-flight device step "
+                         "(deferred retirement + admission settles after "
+                         "draft building); bit-identical outputs to the "
+                         "serial path")
     ap.add_argument("--prefill-len", type=int, default=128,
                     help="fixed prompt pad length (compile prefill once)")
     ap.add_argument("--decoding-length", type=int, default=32)
@@ -179,7 +184,8 @@ def main() -> None:
         default_params=SamplingParams(
             max_new_tokens=args.max_new, sample=args.sample,
             temperature=args.temperature),
-        draft_policy=draft_policy)
+        draft_policy=draft_policy,
+        overlap_drafts=args.overlap_drafts)
     engine = build_engine(ecfg, cfg, params)
 
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
@@ -270,6 +276,13 @@ def main() -> None:
                  f"{st.block_waits} block-waits"
                  if args.kv_layout == "paged" else "")
         print(f"kv cache [{args.kv_layout}]: {cache_mb:.1f} MiB{extra}")
+    br = st.breakdown()
+    mode = "overlap" if args.overlap_drafts else "serial"
+    print(f"step breakdown [{mode}]: draft {br['host_draft_ms']:.2f} ms   "
+          f"device {br['device_step_ms']:.2f} ms   "
+          f"accept {br['accept_commit_ms']:.2f} ms   "
+          f"hidden {br['hidden_host_ms']:.2f} ms   "
+          f"{br['syncs_per_step']:.1f} sync/step")
     print(f"latency  p50 {_pct(lat, 50)*1e3:7.1f} ms   "
           f"p95 {_pct(lat, 95)*1e3:7.1f} ms   "
           f"p99 {_pct(lat, 99)*1e3:7.1f} ms")

@@ -718,9 +718,75 @@ def commit_cache(cache: Dict[str, jax.Array], cache_lens: jax.Array,
     return {"k": k, "v": v}, cache_lens + n_accept
 
 
+def verify_accept_device(tree_tokens: jax.Array, parent: jax.Array,
+                         n_live: jax.Array, chosen: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Device twin of ``repro.core.verify.verify_accept`` (the host accept
+    walk), vmapped over lanes — the fused-step epilogue.
+
+    tree_tokens (B, T) draft-slot tokens; parent (B, T) slot parents
+    (root = -1, padded slots = 0); n_live (B,) live slot count per lane
+    (0 marks an idle placeholder lane); chosen (B, T) the model's
+    prediction at each slot.
+
+    Returns (n_acc (B,), acc_tokens (B, T), kv_slots (B, T)) int32.  The
+    walk starts at the root (always accepted: acc_tokens[0] = chosen[0],
+    kv_slots[0] = 0) and repeatedly steps to the smallest slot c with
+    ``parent[c] == cur and tree_tokens[c] == chosen[cur] and 0 < c <
+    n_live``.  "Smallest slot" is exactly the host semantics: DraftTree
+    children lists are built in increasing slot order and verify_accept
+    takes the first matching child.  Entries past n_acc are zero (commit
+    gathers row lens+0 there — garbage rows, never attended).  Idle lanes
+    (n_live == 0) return n_acc == 0.
+    """
+    B, T = tree_tokens.shape
+
+    def walk(tok, par, nl, ch):
+        slots = jnp.arange(T, dtype=jnp.int32)
+        acc0 = jnp.zeros((T,), jnp.int32).at[0].set(ch[0])
+        kvs0 = jnp.zeros((T,), jnp.int32)
+
+        def body(carry, _):
+            cur, n, done, acc, kvs = carry
+            want = ch[cur]
+            ok = ((par == cur) & (tok == want) & (slots < nl)
+                  & (slots > 0) & jnp.logical_not(done))
+            nxt = jnp.argmax(ok).astype(jnp.int32)
+            found = ok[nxt]
+            acc = jnp.where(found, acc.at[n].set(ch[nxt]), acc)
+            kvs = jnp.where(found, kvs.at[n].set(nxt), kvs)
+            cur = jnp.where(found, nxt, cur)
+            n = jnp.where(found, n + 1, n)
+            done = done | jnp.logical_not(found)
+            return (cur, n, done, acc, kvs), None
+
+        init = (jnp.int32(0), jnp.int32(1), nl <= 0, acc0, kvs0)
+        (_, n, _, acc, kvs), _ = jax.lax.scan(body, init, None,
+                                              length=max(T - 1, 0))
+        n = jnp.where(nl > 0, n, 0)
+        return n, acc, kvs
+
+    tok = jnp.asarray(tree_tokens, jnp.int32)
+    par = jnp.asarray(parent, jnp.int32)
+    nl = jnp.asarray(n_live, jnp.int32)
+    ch = jnp.asarray(chosen, jnp.int32)
+    return jax.vmap(walk)(tok, par, nl, ch)
+
+
+def pack_step_result(n_acc: jax.Array, acc_tokens: jax.Array,
+                     kv_slots: jax.Array) -> jax.Array:
+    """Pack the fused-step outputs into the ONE (B, 1+2T) int32 array that
+    crosses the host boundary per decode step:
+    ``[n_acc | acc_tokens (T) | kv_slots (T)]`` per lane."""
+    return jnp.concatenate([n_acc[:, None].astype(jnp.int32),
+                            acc_tokens.astype(jnp.int32),
+                            kv_slots.astype(jnp.int32)], axis=1)
+
+
 __all__ = ["TransformerConfig", "Params", "init_params", "param_logical_axes",
            "train_logits", "lm_loss", "init_cache", "cache_logical_axes",
            "prefill", "prefill_into_slot", "reset_slot", "tree_step",
            "commit_cache", "blocks_per_lane", "init_paged_cache",
            "paged_row_index", "prefill_paged", "prefill_into_slot_paged",
-           "tree_step_paged", "commit_paged_cache", "reset_blocks"]
+           "tree_step_paged", "commit_paged_cache", "reset_blocks",
+           "verify_accept_device", "pack_step_result"]

@@ -69,6 +69,12 @@ class EngineConfig:
     # sampling: "mixed" honors per-request params; "greedy" compiles the
     # argmax-only fast path and rejects sampled requests at submit
     sampling: str = "mixed"
+    # overlap host work with the in-flight device step (DESIGN.md §Step
+    # pipeline): admission first-token pulls settle after draft building,
+    # and heavy retirement (trie elimination, block frees, handle finalize)
+    # drains inside the next step's flight window.  Bit-identical outputs
+    # to the serial path (losslessness is draft- and timing-independent).
+    overlap_drafts: bool = False
     # session defaults for requests submitted without their own params
     default_params: SamplingParams = field(default_factory=SamplingParams)
     # default speculation policy (draft sources / quotas / trie namespace /
@@ -255,7 +261,8 @@ class ServingEngine:
             eos_id=config.eos_id, prefill_len=config.prefill_len,
             scrub_freed=config.scrub_freed, trie=trie,
             default_params=config.default_params,
-            draft_policy=config.draft_policy)
+            draft_policy=config.draft_policy,
+            overlap_drafts=config.overlap_drafts)
 
     # ---- request surface
     def submit(self, request: Union[Request, Sequence[int]],

@@ -96,10 +96,32 @@ class SchedulerStats:
         self.finished = 0
         self.block_waits = 0     # admissions deferred for blocks, not lanes
         self.peak_blocks = 0     # max physical blocks allocated at once
+        # ---- per-step latency breakdown (totals over decode steps)
+        self.host_draft_ms = 0.0     # draft retrieval/merging + tree packing
+        self.device_step_ms = 0.0    # dispatch -> packed result on the host
+        self.accept_commit_ms = 0.0  # accept bookkeeping, retire, tables
+        self.hidden_host_ms = 0.0    # host work run while a step was in
+        #                              flight on device (overlap mode only)
+        self.host_syncs = 0          # every device->host pull the loop makes
+        self.decode_syncs = 0        # pulls on the decode hot path only
 
     @property
     def occupancy(self) -> float:
         return self.active_lane_steps / max(self.decode_steps * self.lanes, 1)
+
+    @property
+    def syncs_per_decode_step(self) -> float:
+        """Host syncs per decode step (1.0 on the fused hot path)."""
+        return self.decode_syncs / max(self.decode_steps, 1)
+
+    def breakdown(self) -> Dict[str, float]:
+        """Mean per-decode-step latency split in milliseconds."""
+        d = max(self.decode_steps, 1)
+        return {"host_draft_ms": self.host_draft_ms / d,
+                "device_step_ms": self.device_step_ms / d,
+                "accept_commit_ms": self.accept_commit_ms / d,
+                "hidden_host_ms": self.hidden_host_ms / d,
+                "syncs_per_step": self.syncs_per_decode_step}
 
 
 class ContinuousScheduler:
@@ -116,10 +138,27 @@ class ContinuousScheduler:
                  rid_start: int = 0, scrub_freed: bool = False,
                  default_params: Optional[SamplingParams] = None,
                  draft_policy: Optional[DraftPolicy] = None,
-                 sources: Optional[Dict[str, DraftSource]] = None):
+                 sources: Optional[Dict[str, DraftSource]] = None,
+                 overlap_drafts: bool = False,
+                 record_breakdown: bool = False):
         if not fns.supports_slot_serving:
             raise ValueError("StepFns lack prefill_into_slot/init_cache; "
                              "continuous batching needs per-slot admission")
+        if overlap_drafts and fns.fused_step is None:
+            raise ValueError("overlap_drafts needs StepFns.fused_step (the "
+                             "single-dispatch step the overlap window hides "
+                             "host work behind)")
+        self.overlap_drafts = bool(overlap_drafts)
+        self.record_breakdown = bool(record_breakdown)
+        self.step_breakdown: List[Dict[str, float]] = []
+        # overlap mode: requests retired at step k whose heavy bookkeeping
+        # (trie elimination, block free + scrub, handle finalize) is deferred
+        # into step k+1's in-flight window, and admissions whose
+        # prefill_into_slot was dispatched but whose first-token pull is
+        # deferred until the other lanes' drafts are built
+        self._retired: List[RequestState] = []
+        self._pending: Dict[int, RequestState] = {}
+        self._pending_chosen: Dict[int, object] = {}
         self.fns = fns
         self.config = config
         self.eos_id = eos_id
@@ -193,7 +232,17 @@ class ContinuousScheduler:
 
     @property
     def idle(self) -> bool:
-        return self.n_active == 0 and not self.queue
+        return (self.n_active == 0 and not self.queue
+                and not self._pending and not self._retired)
+
+    def _pull(self, x, *, decode: bool = False) -> np.ndarray:
+        """THE device->host transfer point: every pull the loop makes goes
+        through here so tests can assert the per-step sync count (fused
+        decode: exactly one packed pull per step)."""
+        self.stats.host_syncs += 1
+        if decode:
+            self.stats.decode_syncs += 1
+        return np.asarray(x)
 
     # ---------------------------------------------------------- draft sources
     @property
@@ -369,6 +418,8 @@ class ContinuousScheduler:
         finished: List[RequestResult] = []
         fns = self.fns
         for lane in range(self.lanes):
+            if lane in self._pending:
+                continue
             while self.states[lane] is None and self.queue:
                 rs = self.queue[0]
                 if self.allocator is not None and \
@@ -394,7 +445,14 @@ class ContinuousScheduler:
                 else:
                     self.cache, chosen = fns.prefill_into_slot(
                         self.cache, lane, toks, plen)
-                if not self._settle(rs, int(np.asarray(chosen)[0]), lane):
+                if self.overlap_drafts:
+                    # leave the prefill in flight: its first-token pull is
+                    # deferred until _decode has built the other lanes'
+                    # drafts (host draft work overlaps the prefill)
+                    self._pending[lane] = rs
+                    self._pending_chosen[lane] = chosen
+                    break
+                if not self._settle(rs, int(self._pull(chosen)[0]), lane):
                     finished.append(self._finish(rs))
         return finished
 
@@ -433,7 +491,7 @@ class ContinuousScheduler:
             self._tables_dirty = False
         else:
             self.cache, chosen = fns.prefill(toks, lens, **lane_kw)
-        chosen = np.asarray(chosen)
+        chosen = self._pull(chosen)
         finished: List[RequestResult] = []
         for lane, rs in enumerate(cohort):
             if not self._settle(rs, int(chosen[lane]), lane):
@@ -446,6 +504,7 @@ class ContinuousScheduler:
         stays free for the next scheduler iteration."""
         rs.start(first_token)
         rs.first_token_t = time.perf_counter()
+        rs.stats.host_syncs += 1        # the first-token pull
         self.stats.admitted += 1
         self._emit(rs, rs.output)
         if rs.done:
@@ -456,56 +515,126 @@ class ContinuousScheduler:
         return True
 
     # ----------------------------------------------------------------- decode
+    def _build_tree(self, rs: RequestState):
+        # adaptive lanes draft at their controller's current budget; the
+        # remaining slots ride as padding (fixed W — no retrace)
+        budget = (rs.budget_ctl.value if rs.budget_ctl is not None
+                  else None)
+        return build_draft_from_policy(
+            self._resolve_sources(rs.draft), rs.draft, self.config, rs.rid,
+            rs.context, self.fns.pad_id, self.width, budget=budget)
+
     def _decode(self) -> List[RequestResult]:
+        fns, W = self.fns, self.width
+        finished: List[RequestResult] = []
+        if self.n_active == 0 and not self._pending:
+            # nothing to step: flush deferred retirements so run() can end
+            self._drain_retired(finished)
+            return finished
+        fused = fns.fused_step is not None
+        t0 = time.perf_counter()
+        # ---- host draft building.  In overlap mode any admission prefill
+        # dispatched by _admit is still in flight here: draft retrieval /
+        # merging for the established lanes runs behind that device work.
+        trees: List = [None] * self.lanes
+        for l in range(self.lanes):
+            if self.states[l] is not None:
+                trees[l] = self._build_tree(self.states[l])
+        # settle deferred admissions (their first-token pull was hidden
+        # behind the draft building above); a request finishing at prefill
+        # leaves its lane free until the next scheduler iteration
+        for lane in sorted(self._pending):
+            rs = self._pending[lane]
+            chosen = self._pending_chosen[lane]
+            if self._settle(rs, int(self._pull(chosen)[0]), lane):
+                trees[lane] = self._build_tree(rs)
+            else:
+                finished.append(self._finish(rs))
+        self._pending.clear()
+        self._pending_chosen.clear()
         active = [l for l in range(self.lanes) if self.states[l] is not None]
         if not active:
-            return []
-        cfg, fns, W = self.config, self.fns, self.width
-        trees = []
+            self._drain_retired(finished)
+            return finished
         for l in range(self.lanes):
-            rs = self.states[l]
-            if rs is None:
-                trees.append(idle_tree(W, fns.pad_id))
-                continue
-            # adaptive lanes draft at their controller's current budget; the
-            # remaining slots ride as padding (fixed W — no retrace)
-            budget = (rs.budget_ctl.value if rs.budget_ctl is not None
-                      else None)
-            trees.append(build_draft_from_policy(
-                self._resolve_sources(rs.draft), rs.draft, cfg, rs.rid,
-                rs.context, fns.pad_id, W, budget=budget))
+            if trees[l] is None:
+                trees[l] = idle_tree(W, fns.pad_id)
         tok = np.stack([t.tokens for t in trees])                     # (B,W)
         pos = (self.lens[:, None]
                + np.stack([t.depth for t in trees])).astype(np.int32)
         mask = np.stack([t.tree_mask for t in trees])                 # (B,W,W)
         self._sync_tables()
-        if fns.per_lane_params:
-            self.cache, chosen = fns.tree_step(
-                self.cache, self.lens, tok, pos, mask,
-                lane_params=self._lane_params_all())
+        lane_kw = ({"lane_params": self._lane_params_all()}
+                   if fns.per_lane_params else {})
+        t1 = time.perf_counter()
+        drained = 0.0
+        new_lens = self.lens.copy()
+        if fused:
+            # ---- single-dispatch hot path: tree forward + token choice +
+            # device accept walk + commit in ONE jitted call; ONE packed
+            # (B, 1+2W) pull crosses the host boundary per step.  The
+            # device accepts untruncated; host-side truncation (budget /
+            # EOS / stop) always retires the lane, so the extra committed
+            # rows are garbage that is never attended (I3).
+            parent = np.stack([t.parent for t in trees]).astype(np.int32)
+            n_live = np.asarray(
+                [t.n_slots if self.states[l] is not None else 0
+                 for l, t in enumerate(trees)], dtype=np.int32)
+            self.cache, packed = fns.fused_step(
+                self.cache, self.lens, tok, pos, mask, parent, n_live,
+                **lane_kw)
+            if self._retired:
+                # overlap window: the step is in flight — run the previous
+                # step's deferred heavy retirement behind it
+                td = time.perf_counter()
+                self._drain_retired(finished)
+                drained = time.perf_counter() - td
+                self.stats.hidden_host_ms += drained * 1e3
+            packed = self._pull(packed, decode=True)   # THE one sync point
+            t2 = time.perf_counter()
+            accepted = [packed[l, 1:1 + packed[l, 0]]
+                        for l in range(self.lanes)]
+            kv_slots = [packed[l, 1 + W:1 + W + packed[l, 0]]
+                        for l in range(self.lanes)]
+            for l in active:
+                rs = self.states[l]
+                n_before = len(rs.output)
+                ks = rs.accept(accepted[l], kv_slots[l], trees[l].n_slots,
+                               slot_sources=trees[l].slot_source)
+                new_lens[l] += len(ks)
+                rs.stats.host_syncs += 1
+                self._emit(rs, rs.output[n_before:])
         else:
-            self.cache, chosen = fns.tree_step(self.cache, self.lens, tok,
-                                               pos, mask)
-        chosen = np.asarray(chosen)
-
-        accepted, kv_slots = verify_accept_batch(trees, chosen)
-        gather = np.zeros((self.lanes, W), dtype=np.int32)
-        n_acc = np.zeros((self.lanes,), dtype=np.int32)
-        for l in active:
-            rs = self.states[l]
-            n_before = len(rs.output)
-            ks = rs.accept(accepted[l], kv_slots[l], trees[l].n_slots,
-                           slot_sources=trees[l].slot_source)
-            gather[l, :len(ks)] = np.asarray(ks, dtype=np.int32)
-            n_acc[l] = len(ks)
-            self._emit(rs, rs.output[n_before:])
-        self.cache, new_lens = fns.commit(self.cache, self.lens, gather,
-                                          n_acc)
-        self.lens = np.asarray(new_lens, dtype=np.int32).copy()
+            # ---- legacy two-dispatch path (StepFns without fused_step):
+            # chosen pull -> host accept walk -> commit -> new_lens pull
+            if fns.per_lane_params:
+                self.cache, chosen = fns.tree_step(
+                    self.cache, self.lens, tok, pos, mask, **lane_kw)
+            else:
+                self.cache, chosen = fns.tree_step(self.cache, self.lens,
+                                                   tok, pos, mask)
+            chosen = self._pull(chosen, decode=True)
+            t2 = time.perf_counter()
+            accepted, kv_slots = verify_accept_batch(trees, chosen)
+            gather = np.zeros((self.lanes, W), dtype=np.int32)
+            n_acc = np.zeros((self.lanes,), dtype=np.int32)
+            for l in active:
+                rs = self.states[l]
+                n_before = len(rs.output)
+                ks = rs.accept(accepted[l], kv_slots[l], trees[l].n_slots,
+                               slot_sources=trees[l].slot_source)
+                gather[l, :len(ks)] = np.asarray(ks, dtype=np.int32)
+                n_acc[l] = len(ks)
+                rs.stats.host_syncs += 2
+                self._emit(rs, rs.output[n_before:])
+            self.cache, lens_dev = fns.commit(self.cache, self.lens, gather,
+                                              n_acc)
+            new_lens = self._pull(lens_dev, decode=True).astype(
+                np.int32).copy()
+        self.lens = new_lens
         self.stats.decode_steps += 1
         self.stats.active_lane_steps += len(active)
 
-        finished: List[RequestResult] = []
         for l in active:
             rs = self.states[l]
             self._observe_output(rs)
@@ -517,11 +646,29 @@ class ContinuousScheduler:
                 rs.done = True
                 rs.finish_reason = rs.finish_reason or "cache"
             if rs.done:
-                finished.append(self._finish(rs))
-                self.states[l] = None
-                self.lens[l] = 0
+                if self.overlap_drafts:
+                    # free the lane now; the heavy bookkeeping runs in the
+                    # next step's in-flight window (_drain_retired)
+                    self._release_lane(rs, l)
+                else:
+                    finished.append(self._finish(rs))
+                    self.states[l] = None
+                    self.lens[l] = 0
         if self.allocator is not None:
             self._extend_tables(active)
+        t3 = time.perf_counter()
+        self.stats.host_draft_ms += (t1 - t0) * 1e3
+        self.stats.device_step_ms += (t2 - t1 - drained) * 1e3
+        self.stats.accept_commit_ms += (t3 - t2) * 1e3
+        if self.record_breakdown:
+            self.step_breakdown.append({
+                "step": self.stats.decode_steps,
+                "active": len(active),
+                "host_draft_ms": (t1 - t0) * 1e3,
+                "device_step_ms": (t2 - t1 - drained) * 1e3,
+                "accept_commit_ms": (t3 - t2) * 1e3,
+                "hidden_host_ms": drained * 1e3,
+                "syncs": 1 if fused else 2})
         return finished
 
     def _extend_tables(self, active: List[int]) -> None:
@@ -579,30 +726,80 @@ class ContinuousScheduler:
                 self.states[lane] = None
                 self.lens[lane] = 0
                 return True
+        for lane, rs in list(self._pending.items()):
+            # overlap mode: admission prefill still in flight — drop the
+            # reservation; the in-flight write lands before any re-admission
+            # into the lane overwrites it (device-stream dispatch order)
+            if rs.rid == rid:
+                del self._pending[lane]
+                del self._pending_chosen[lane]
+                rs.cancel()
+                self._finish(rs)
+                return True
+        for i, rs in enumerate(self._retired):
+            # already done, heavy retirement still deferred: finalize now so
+            # the caller sees a result immediately
+            if rs.rid == rid:
+                self._finish_retire(self._retired.pop(i))
+                return False
         return False
 
     # ----------------------------------------------------------------- retire
+    def _release_lane(self, rs: RequestState, lane: int) -> None:
+        """Overlap mode: free the lane for next-iteration admission NOW;
+        the heavy bookkeeping (trie elimination, block free + scrub, handle
+        finalize) is deferred into the next step's in-flight window.
+
+        The lane-keyed pieces must run here — the lane may be re-admitted
+        before the deferred work drains: the table row is zeroed (the
+        physical blocks stay owned by this rid until the deferred free, so
+        they cannot be reallocated in between) and the dense lane scrub
+        fires (a scrub after reuse would destroy the next request's KV)."""
+        rs.finish_t = time.perf_counter()
+        rs.lane = -1
+        self.states[lane] = None
+        self.lens[lane] = 0
+        if self.allocator is not None:
+            self.tables[lane, :] = 0
+            self._tables_dirty = True
+        elif (self.scrub_freed and self.fns.reset_slot is not None
+                and self.cache is not None):
+            self.cache = self.fns.reset_slot(self.cache, lane)
+        self._retired.append(rs)
+
+    def _drain_retired(self, finished: List[RequestResult]) -> None:
+        """Run the deferred heavy retirement work (overlap mode).  Called
+        while the next step is in flight on device — or, when no step is in
+        flight, before run() can go idle."""
+        while self._retired:
+            finished.append(self._finish_retire(self._retired.pop(0)))
+
     def _finish(self, rs: RequestState) -> RequestResult:
+        """Immediate retire (serial mode, cancel, finish-at-prefill)."""
         rs.finish_t = time.perf_counter()
         lane = rs.lane
         rs.lane = -1
+        if self.allocator is not None and lane >= 0:
+            self.tables[lane, :] = 0
+            self._tables_dirty = True
+        elif (self.scrub_freed and self.fns.reset_slot is not None
+                and lane >= 0 and self.cache is not None):
+            self.cache = self.fns.reset_slot(self.cache, lane)
+        return self._finish_retire(rs)
+
+    def _finish_retire(self, rs: RequestState) -> RequestResult:
         self._retire_sources(rs)
         if self.allocator is not None:
             # free-list first, scrub second — but always BEFORE the next
             # admission can reach the allocator, so a scrub can never hit a
             # block that already belongs to a newly admitted request
             freed = self.allocator.free(rs.rid)
-            if lane >= 0:
-                self.tables[lane, :] = 0
-                self._tables_dirty = True
             if (self.scrub_freed and freed and self.cache is not None
                     and self.fns.reset_blocks is not None):
                 ids = np.zeros((self.fns.blocks_per_lane,), dtype=np.int32)
                 ids[:len(freed)] = np.asarray(freed, dtype=np.int32)
                 self.cache = self.fns.reset_blocks(self.cache, ids)
-        elif (self.scrub_freed and self.fns.reset_slot is not None
-                and lane >= 0 and self.cache is not None):
-            self.cache = self.fns.reset_slot(self.cache, lane)
+        self._stamp_breakdown(rs)
         res = rs.result()
         self.results[rs.rid] = res
         self.stats.finished += 1
@@ -610,6 +807,16 @@ class ContinuousScheduler:
         if h is not None:                    # must not accrete dead handles
             h._finalize(res)
         return res
+
+    def _stamp_breakdown(self, rs: RequestState) -> None:
+        """Apportion the scheduler's batch-level per-step latency means to
+        this request over the decode steps it rode in (its GenStats carry
+        the breakdown into RequestResult)."""
+        st, d = self.stats, max(self.stats.decode_steps, 1)
+        part = max(rs.stats.steps - 1, 0)    # minus the prefill step
+        rs.stats.host_draft_ms = st.host_draft_ms / d * part
+        rs.stats.device_step_ms = st.device_step_ms / d * part
+        rs.stats.accept_commit_ms = st.accept_commit_ms / d * part
 
 
 __all__ = ["ContinuousScheduler", "SchedulerStats"]

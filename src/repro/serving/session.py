@@ -3,7 +3,8 @@
 Compile-once contract (DESIGN.md §Compile-once shapes): for one session every
 device function is traced for exactly one shape —
 
-  * ``tree_step`` / ``commit`` at the engine's tree width T and lane count B,
+  * ``tree_step`` / ``fused_step`` / ``commit`` at the engine's tree width T
+    and lane count B,
   * ``prefill`` at ``(B, prefill_len)`` for the initial admission cohort,
   * ``prefill_into_slot`` at ``(1, prefill_len)`` (lane index is a traced
     scalar, so admission into any slot reuses the same executable).
@@ -182,6 +183,20 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                                          n_accept)
 
         @functools.partial(jax.jit, donate_argnums=(0,))
+        def _fused_step(cache, cache_lens, tokens, pos, mask, parent, n_live,
+                        lane_params):
+            cache, logits = tx.tree_step_paged(cfg, params, cache,
+                                               cache_lens, tokens, pos, mask)
+            if logits_transform is not None:
+                logits = logits_transform(logits, tokens, pos)
+            chosen = _choose(logits, pos + 1, lane_params)
+            n_acc, acc_tok, kv_slots = tx.verify_accept_device(
+                tokens, parent, n_live, chosen)
+            cache, _ = tx.commit_paged_cache(cfg, cache, cache_lens,
+                                             kv_slots, n_acc)
+            return cache, tx.pack_step_result(n_acc, acc_tok, kv_slots)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
         def _reset_blocks(cache, block_ids):
             return tx.reset_blocks(cache, block_ids)
 
@@ -205,8 +220,16 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
             return _tree_step(cache, cache_lens, tokens, pos, mask,
                               lane_params)
 
+        def fused_step(cache, cache_lens, tokens, pos, mask, parent, n_live,
+                       lane_params=None):
+            if lane_params is None:
+                lane_params = _default_lane_params(tokens.shape[0])
+            return _fused_step(cache, cache_lens, tokens, pos, mask,
+                               parent, n_live, lane_params)
+
         return StepFns(prefill=_expose(prefill, _prefill),
                        tree_step=_expose(tree_step, _tree_step),
+                       fused_step=_expose(fused_step, _fused_step),
                        commit=_commit, slots=slots,
                        max_seq_len=cfg.max_seq_len, pad_id=pad_id,
                        init_cache=_init_cache,
@@ -244,6 +267,19 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
         return tx.commit_cache(cache, cache_lens, gather_idx, n_accept)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
+    def _fused_step(cache, cache_lens, tokens, pos, mask, parent, n_live,
+                    lane_params):
+        cache, logits = tx.tree_step(cfg, params, cache, cache_lens,
+                                     tokens, pos, mask)
+        if logits_transform is not None:
+            logits = logits_transform(logits, tokens, pos)
+        chosen = _choose(logits, pos + 1, lane_params)
+        n_acc, acc_tok, kv_slots = tx.verify_accept_device(
+            tokens, parent, n_live, chosen)
+        cache, _ = tx.commit_cache(cache, cache_lens, kv_slots, n_acc)
+        return cache, tx.pack_step_result(n_acc, acc_tok, kv_slots)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def _reset_slot(cache, slot):
         return tx.reset_slot(cache, slot)
 
@@ -265,8 +301,16 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
             lane_params = _default_lane_params(tokens.shape[0])
         return _tree_step(cache, cache_lens, tokens, pos, mask, lane_params)
 
+    def fused_step(cache, cache_lens, tokens, pos, mask, parent, n_live,
+                   lane_params=None):
+        if lane_params is None:
+            lane_params = _default_lane_params(tokens.shape[0])
+        return _fused_step(cache, cache_lens, tokens, pos, mask,
+                           parent, n_live, lane_params)
+
     return StepFns(prefill=_expose(prefill, _prefill),
                    tree_step=_expose(tree_step, _tree_step),
+                   fused_step=_expose(fused_step, _fused_step),
                    commit=_commit,
                    slots=slots, max_seq_len=cfg.max_seq_len, pad_id=pad_id,
                    init_cache=_init_cache,

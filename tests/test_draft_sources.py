@@ -424,5 +424,6 @@ def test_compile_once_under_mixed_policies():
         sched.run()
     assert fresh.prefill._cache_size() == 1
     assert fresh.prefill_into_slot._cache_size() == 1
-    assert fresh.tree_step._cache_size() == 1
-    assert fresh.commit._cache_size() == 1
+    assert fresh.fused_step._cache_size() == 1
+    assert fresh.tree_step._cache_size() == 0   # unfused parity oracle only
+    assert fresh.commit._cache_size() == 0

@@ -1,0 +1,211 @@
+"""Fused-step parity: the single-dispatch device step (tree forward +
+token choice + device accept walk + commit, one packed array out) must be
+bit-identical to the unfused logits path it replaces (ISSUE 6).
+
+Three levels:
+
+  * op-level — ``verify_accept_device`` replicates the host
+    ``verify_accept`` walk exactly on real DraftTrees (ragged n_slots,
+    first-child tie-breaking, idle placeholder lanes via n_live == 0);
+  * step-level — one ``fused_step`` call returns the same packed
+    (n_acc, acc_tokens, kv_slots) the host walk derives from the unfused
+    ``tree_step`` logits, and commits the same KV rows, across GQA shapes
+    and mixed greedy/sampled per-lane params;
+  * serving-level — a scheduler driven by ``fused_step`` produces
+    bit-identical outputs to one forced onto the legacy
+    tree_step/verify/commit path, for dense/paged x dense/pallas (the
+    pallas cells run the interpret-mode kernels on CPU), with exactly one
+    decode-hot-path sync per step (vs two on the legacy path).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LookaheadConfig, reference_decode
+from repro.core.request import (Request, SamplingParams, build_draft_tree,
+                                idle_tree)
+from repro.core.trie import TrieTree
+from repro.core.verify import verify_accept_batch
+from repro.models.transformer import (TransformerConfig, init_params,
+                                      verify_accept_device)
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.session import make_session_fns
+
+PREFILL = 32
+SLOTS = 9
+VOCAB = 61
+
+_CFG = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                         d_ff=128, vocab_size=VOCAB, max_seq_len=192)
+_PARAMS = init_params(_CFG, jax.random.key(21))
+
+CELLS = (("dense", "dense", 0), ("dense", "pallas", 0),
+         ("paged", "dense", 8), ("paged", "pallas", 8))
+
+
+def _prompts(rng, n, lo=4, hi=24):
+    return [list(rng.randint(1, VOCAB - 1, size=rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------------ op level
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_device_walk_matches_host_verify(seed):
+    """verify_accept_device == verify_accept on genuine trie-built trees
+    with chosen vectors crafted to follow real acceptance chains."""
+    rng = np.random.RandomState(seed)
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=5)
+    trie = TrieTree(capacity=4096)
+    for _ in range(20):
+        trie.insert_ngrams(rng.randint(1, VOCAB, size=30).tolist(),
+                           la.branch_length)
+    W = SLOTS
+    trees = []
+    for _ in range(5):
+        ctx = rng.randint(1, VOCAB, size=rng.randint(6, 30)).tolist()
+        trees.append(build_draft_tree(trie, la, ctx, 0, W))
+    trees.append(idle_tree(W, 0))                  # idle placeholder lane
+    B = len(trees)
+    chosen = rng.randint(1, VOCAB, size=(B, W)).astype(np.int32)
+    # follow the tree: make the model "predict" real children often enough
+    # that walks go deep (later children overwrite earlier on a shared
+    # parent — the first-child tie-break is exactly what is under test)
+    for b, t in enumerate(trees):
+        for c in range(1, t.n_slots):
+            if rng.rand() < 0.6:
+                chosen[b, t.parent[c]] = t.tokens[c]
+
+    accepted, kv_slots = verify_accept_batch(trees, chosen)
+    tok = np.stack([t.tokens for t in trees]).astype(np.int32)
+    parent = np.stack([t.parent for t in trees]).astype(np.int32)
+    n_live = np.asarray([t.n_slots for t in trees[:-1]] + [0], np.int32)
+    n_acc, acc_tok, kvs = jax.jit(verify_accept_device)(tok, parent, n_live,
+                                                        chosen)
+    n_acc, acc_tok, kvs = (np.asarray(n_acc), np.asarray(acc_tok),
+                           np.asarray(kvs))
+    for b in range(B - 1):
+        n = int(n_acc[b])
+        assert n == len(accepted[b]), (seed, b)
+        assert acc_tok[b, :n].tolist() == [int(x) for x in accepted[b]]
+        assert kvs[b, :n].tolist() == [int(x) for x in kv_slots[b]]
+        assert not acc_tok[b, n:].any() and not kvs[b, n:].any()
+    assert int(n_acc[B - 1]) == 0                  # idle lane accepts nothing
+
+
+# ---------------------------------------------------------------- step level
+@pytest.mark.kernels
+@pytest.mark.parametrize("layout,backend,bs", CELLS,
+                         ids=[f"{l}-{b}" for l, b, _ in CELLS])
+def test_fused_step_matches_unfused_step(layout, backend, bs):
+    """One fused_step vs tree_step + host verify + commit on identical
+    caches: same packed results, same committed KV rows — with a ragged-T
+    draft mix (full tree / shallow tree / idle lane) and mixed
+    greedy/sampled lane params."""
+    fns = make_session_fns(_CFG, _PARAMS, slots=SLOTS, prefill_len=PREFILL,
+                           backend=backend, kv_layout=layout,
+                           block_size=bs or None)
+    rng = np.random.RandomState(7)
+    lanes = 3
+    toks = np.full((lanes, PREFILL), 0, dtype=np.int32)
+    lens = np.zeros((lanes,), dtype=np.int32)
+    for b, p in enumerate(_prompts(rng, lanes, lo=8, hi=PREFILL)):
+        toks[b, :len(p)] = p
+        lens[b] = len(p)
+    lane_params = {"greedy": np.asarray([True, False, True]),
+                   "temp": np.asarray([1.0, 0.8, 1.0], np.float32),
+                   "seed": np.asarray([0, 77, 0], np.uint32)}
+    if layout == "paged":
+        bpl = fns.blocks_per_lane
+        tables = np.arange(1, 1 + lanes * bpl,
+                           dtype=np.int32).reshape(lanes, bpl)
+        cache, _ = fns.prefill(toks, lens, tables, lane_params=lane_params)
+    else:
+        cache, _ = fns.prefill(toks, lens, lane_params=lane_params)
+    cache = {k: np.asarray(v) for k, v in cache.items()}
+
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
+    trie = TrieTree(capacity=4096)
+    for _ in range(12):
+        trie.insert_ngrams(rng.randint(1, VOCAB, size=24).tolist(), 4)
+    trees = [build_draft_tree(trie, la,
+                              toks[0, :lens[0]].tolist(), 0, SLOTS),
+             build_draft_tree(trie, LookaheadConfig(decoding_length=2,
+                                                    branch_length=2),
+                              toks[1, :lens[1]].tolist(), 0, SLOTS),
+             idle_tree(SLOTS, 0)]                  # ragged T + idle lane
+    tok = np.stack([t.tokens for t in trees])
+    pos = (lens[:, None] + np.stack([t.depth for t in trees])).astype(
+        np.int32)
+    mask = np.stack([t.tree_mask for t in trees])
+    parent = np.stack([t.parent for t in trees]).astype(np.int32)
+    n_live = np.asarray([trees[0].n_slots, trees[1].n_slots, 0], np.int32)
+
+    # ---- unfused reference: tree_step -> host walk -> commit
+    c1 = {k: v.copy() for k, v in cache.items()}
+    c1, chosen = fns.tree_step(c1, lens, tok, pos, mask,
+                               lane_params=lane_params)
+    chosen = np.asarray(chosen)
+    accepted, kv_slots = verify_accept_batch(trees, chosen)
+    gather = np.zeros((lanes, SLOTS), dtype=np.int32)
+    n_acc = np.zeros((lanes,), dtype=np.int32)
+    for b in range(2):                             # idle lane commits 0
+        gather[b, :len(kv_slots[b])] = kv_slots[b]
+        n_acc[b] = len(kv_slots[b])
+    c1, new_lens = fns.commit(c1, lens, gather, n_acc)
+
+    # ---- fused: one dispatch, one packed array
+    c2 = {k: v.copy() for k, v in cache.items()}
+    c2, packed = fns.fused_step(c2, lens, tok, pos, mask, parent, n_live,
+                                lane_params=lane_params)
+    packed = np.asarray(packed)
+    assert packed.shape == (lanes, 1 + 2 * SLOTS)
+    for b in range(2):
+        n = int(packed[b, 0])
+        assert n == len(accepted[b]), (layout, backend, b)
+        assert packed[b, 1:1 + n].tolist() == \
+            [int(x) for x in accepted[b]]
+        assert packed[b, 1 + SLOTS:1 + SLOTS + n].tolist() == \
+            [int(x) for x in kv_slots[b]]
+    assert int(packed[2, 0]) == 0
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(c2[name]),
+                                      np.asarray(c1[name]),
+                                      err_msg=f"{layout}/{backend}/{name}")
+
+
+# ------------------------------------------------------------- serving level
+@pytest.mark.kernels
+@pytest.mark.parametrize("layout,backend,bs", CELLS,
+                         ids=[f"{l}-{b}" for l, b, _ in CELLS])
+def test_fused_scheduler_matches_legacy_path(layout, backend, bs):
+    """Scheduler on fused_step vs the same StepFns with fused_step stripped
+    (legacy two-dispatch decode): bit-identical outputs, both equal
+    reference_decode, and the sync counters show 1 vs 2 pulls per step."""
+    fns = make_session_fns(_CFG, _PARAMS, slots=SLOTS, prefill_len=PREFILL,
+                           backend=backend, kv_layout=layout,
+                           block_size=bs or None)
+    legacy = dataclasses.replace(fns, fused_step=None)
+    rng = np.random.RandomState(13)
+    prompts = _prompts(rng, 5)
+    specs = [SamplingParams(max_new_tokens=int(rng.randint(1, 16)),
+                            sample=bool(i % 2),
+                            temperature=(0.6, 0.9)[i % 2], seed=100 + i)
+             for i, _ in enumerate(prompts)]
+    refs = [reference_decode(fns, p, params=s)
+            for p, s in zip(prompts, specs)]
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
+    outs = {}
+    for name, f in (("fused", fns), ("legacy", legacy)):
+        sched = ContinuousScheduler(f, la, lanes=2, prefill_len=PREFILL)
+        handles = [sched.submit_request(Request(prompt=p, params=s))
+                   for p, s in zip(prompts, specs)]
+        sched.run()
+        outs[name] = [h.result().tokens for h in handles]
+        st = sched.stats
+        per_step = 1 if name == "fused" else 2
+        assert st.decode_syncs == per_step * st.decode_steps, name
+    assert outs["fused"] == outs["legacy"]
+    for got, ref in zip(outs["fused"], refs):
+        assert got == ref

@@ -130,6 +130,47 @@ def test_fuzz_paged_backpressure_lossless(seed):
         assert r.tokens == _ref(cell, prompts[i], budgets[i]), (seed, i)
 
 
+# ------------------------------------------- fused step + overlap fuzz (I1)
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5), st.integers(0, 1))
+def test_fuzz_overlap_mode_lossless(seed, n_req, bs_idx):
+    """The fused single-sync decode step with ``overlap_drafts`` on and off:
+    random workloads through every matrix cell must stay bit-identical to
+    reference_decode AND to each other (overlap defers bookkeeping into the
+    device flight window but may never change tokens), while the decode hot
+    path makes exactly one host sync per step."""
+    rng = np.random.RandomState(seed % 2**31)
+    block_size = BLOCK_SIZES[bs_idx]
+    prompts = [rng.randint(1, VOCAB - 1,
+                           size=rng.randint(1, PREFILL - 4)).tolist()
+               for _ in range(n_req)]
+    budgets = [int(rng.randint(1, 18)) for _ in range(n_req)]
+    lanes = int(rng.randint(1, 3))
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
+    for cell in _cells(block_size):
+        fns = _get_fns(*cell)
+        outs = {}
+        for overlap in (False, True):
+            sched = ContinuousScheduler(fns, la, lanes=lanes,
+                                        prefill_len=PREFILL,
+                                        overlap_drafts=overlap)
+            rid_to_idx = {sched.submit(p, m): i
+                          for i, (p, m) in enumerate(zip(prompts, budgets))}
+            res = sched.run()
+            assert len(res) == n_req
+            got = [None] * n_req
+            for r in res:
+                i = rid_to_idx[r.rid]
+                got[i] = r.tokens
+                assert r.tokens == _ref(cell, prompts[i], budgets[i]), \
+                    (cell, seed, overlap, i)
+            st_ = sched.stats
+            assert st_.decode_syncs == st_.decode_steps, (cell, overlap)
+            assert not sched._retired and not sched._pending
+            outs[overlap] = got
+        assert outs[True] == outs[False], (cell, seed)
+
+
 # --------------------------------------------------- draft-source fuzz (I5)
 _SOURCE_COMBOS = (("trie",), ("prompt_copy",), ("ngram",),
                   ("trie", "ngram"), ("trie", "prompt_copy", "ngram"))

@@ -248,5 +248,6 @@ def test_paged_step_fns_compile_once():
         sched.run()
     assert fns.prefill._cache_size() == 1
     assert fns.prefill_into_slot._cache_size() == 1
-    assert fns.tree_step._cache_size() == 1
-    assert fns.commit._cache_size() == 1
+    assert fns.fused_step._cache_size() == 1
+    assert fns.tree_step._cache_size() == 0   # unfused parity oracle only
+    assert fns.commit._cache_size() == 0

@@ -141,7 +141,9 @@ def test_engine_wrapper_routes_through_scheduler(fns):
 def test_step_fns_compile_once():
     """I2: varying prompt lengths, budgets and request counts never retrace
     the jitted step functions — one executable per (lanes, T) /
-    (lanes, prefill_len) / (1, prefill_len) shape."""
+    (lanes, prefill_len) / (1, prefill_len) shape.  The decode hot path is
+    the single-dispatch ``fused_step``; ``tree_step``/``commit`` stay cold
+    (they are the unfused parity oracle and the lock-step loop's surface)."""
     cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
                             d_ff=64, vocab_size=53, max_seq_len=160)
     params = init_params(cfg, jax.random.key(5))
@@ -155,8 +157,58 @@ def test_step_fns_compile_once():
         sched.run()
     assert fresh.prefill._cache_size() == 1           # (lanes, prefill_len)
     assert fresh.prefill_into_slot._cache_size() == 1  # (1, prefill_len)
-    assert fresh.tree_step._cache_size() == 1          # (lanes, T)
-    assert fresh.commit._cache_size() == 1
+    assert fresh.fused_step._cache_size() == 1         # (lanes, T)
+    assert fresh.tree_step._cache_size() == 0          # parity oracle only
+    assert fresh.commit._cache_size() == 0
+
+
+@pytest.mark.parametrize("overlap", [False, True], ids=["serial", "overlap"])
+def test_decode_hot_path_one_sync_per_step(fns, overlap):
+    """The fused decode step makes exactly ONE device->host pull (the
+    packed accept array) per decode step, serial and overlap mode alike;
+    admission pulls stay off the decode counter."""
+    prompts = _prompts(6, seed=31)
+    sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL,
+                                overlap_drafts=overlap)
+    for p in prompts:
+        sched.submit(p, 16)
+    res = sched.run()
+    assert len(res) == len(prompts)
+    st = sched.stats
+    assert st.decode_steps > 0
+    assert st.decode_syncs == st.decode_steps
+    assert st.syncs_per_decode_step == 1.0
+    # total pulls = decode steps + one first-token pull per admission batch
+    # (the initial cohort is one batched pull; mid-flight admissions pull
+    # once each) — strictly fewer than 2 per decode step overall
+    assert st.host_syncs <= st.decode_steps + st.admitted
+    # breakdown accrues on every decode step
+    br = st.breakdown()
+    assert br["device_step_ms"] > 0.0
+    assert br["syncs_per_step"] == 1.0
+
+
+def test_overlap_mode_bit_identical_to_serial(fns):
+    """overlap_drafts defers bookkeeping but never changes tokens: same
+    request set through serial and overlap schedulers, same outputs, and
+    both equal reference_decode (I1)."""
+    prompts = _prompts(6, seed=33)
+    budgets = [3, 24, 1, 15, 24, 8]
+    refs = [reference_decode(fns, p, m) for p, m in zip(prompts, budgets)]
+    outs = {}
+    for overlap in (False, True):
+        sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL,
+                                    overlap_drafts=overlap)
+        for p, m in zip(prompts, budgets):
+            sched.submit(p, m)
+        res = sched.run()
+        assert len(res) == len(prompts)
+        outs[overlap] = [r.tokens for r in res]
+        for r, ref in zip(res, refs):
+            assert r.tokens == ref, overlap
+        assert sched.stats.finished == len(prompts)
+        assert not sched._retired and not sched._pending
+    assert outs[True] == outs[False]
 
 
 def test_reset_slot_scrubs_one_lane_only():

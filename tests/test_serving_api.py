@@ -233,8 +233,9 @@ def test_mixed_params_never_retrace():
         fresh.run()
     assert fresh.fns.prefill._cache_size() == 1
     assert fresh.fns.prefill_into_slot._cache_size() == 1
-    assert fresh.fns.tree_step._cache_size() == 1
-    assert fresh.fns.commit._cache_size() == 1
+    assert fresh.fns.fused_step._cache_size() == 1
+    assert fresh.fns.tree_step._cache_size() == 0  # unfused parity oracle only
+    assert fresh.fns.commit._cache_size() == 0
 
 
 # ------------------------------------------- overflow retirement (PR-3 fix)
