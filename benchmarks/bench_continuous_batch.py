@@ -49,7 +49,7 @@ def _mixed_params(budgets):
 
 
 def _continuous(fns, la, prompts, specs, lanes, draft_policy=None,
-                overlap=False, record_breakdown=False
+                overlap=False, record_breakdown=False, prefix_cache=False
                 ) -> Tuple[list, float, object, int]:
     """One scheduler generation; ``specs`` are per-request budgets (ints,
     legacy submit) or SamplingParams (request-centric submit).  Returns the
@@ -58,7 +58,8 @@ def _continuous(fns, la, prompts, specs, lanes, draft_policy=None,
                                 prefill_len=PREFILL_LEN,
                                 draft_policy=draft_policy,
                                 overlap_drafts=overlap,
-                                record_breakdown=record_breakdown)
+                                record_breakdown=record_breakdown,
+                                prefix_cache=prefix_cache)
     t0 = time.perf_counter()
     for p, s in zip(prompts, specs):
         if isinstance(s, SamplingParams):
@@ -315,6 +316,105 @@ def run_breakdown(n_queries: int = 16, max_new: int = 48, lanes: int = LANES,
     return doc
 
 
+def run_prefix(n_queries: int = 24, max_new: int = 48, lanes: int = LANES,
+               shared_len: int = 40, json_out: str = None) -> dict:
+    """``--prefix-cache``: radix prefix caching on a prefix-heavy stream.
+
+    Every request opens with the same system prompt (``shared_len`` tokens)
+    followed by a per-request tail — the RAG/chat shape the radix cache
+    targets — plus a slice of divergent miss traffic.  Runs the paged
+    scheduler with the cache off and on, asserts bit-identical outputs (and
+    reference_decode on spot-checked queries), and reports hit rate,
+    prefill-tokens-saved and tok/s.  A small block size (16) keeps block
+    granularity well under the shared head so full-block sharing dominates.
+    Emits CSV lines and optionally a JSON document (the BENCH_prefix seed).
+    """
+    import json
+
+    from repro.serving.block_allocator import demand_blocks
+
+    block_size = 16
+    lanes = max(2, min(lanes, n_queries // 2))
+    cfg, params = bench_model()
+    la = LookaheadConfig(decoding_length=16, branch_length=8)
+    shared_len = min(shared_len, PREFILL_LEN - 8)
+    tail_cap = max(PREFILL_LEN - shared_len, 4)
+    ds = make_dataset("antrag", n_queries + 1, prompt_cap=PREFILL_LEN - 8)
+    system_prompt = ds[0][0][:shared_len]
+    prompts = [system_prompt + p[:tail_cap - 1] for p, _ in ds[1:]]
+    # ~1 in 6 requests is divergent miss traffic (no shared head)
+    for i in range(0, len(prompts), 6):
+        prompts[i] = ds[1 + i][0]
+    budgets = [max_new if i % 2 else max(max_new // 8, 2)
+               for i in range(len(prompts))]
+
+    per_lane = demand_blocks(PREFILL_LEN, max_new, la.slots,
+                             cfg.max_seq_len, block_size)
+    # headroom beyond the lanes' worst case so cached prefixes stay resident
+    paged_blocks = 1 + (lanes + 2) * per_lane
+    fns = make_guided_session_fns(cfg, params, phase=2, slots=la.slots,
+                                  prefill_len=PREFILL_LEN, kv_layout="paged",
+                                  block_size=block_size,
+                                  n_blocks=paged_blocks)
+    doc = {"bench": "continuous_batch_prefix", "queries": len(prompts),
+           "max_new": max_new, "lanes": lanes, "shared_len": shared_len,
+           "block_size": block_size, "cells": {}}
+    outs = {}
+    tps = {}
+    for mode, cached in (("uncached", False), ("cached", True)):
+        _continuous(fns, la, prompts[:lanes * 2], [4] * (lanes * 2), lanes,
+                    prefix_cache=cached)                     # compile warmup
+        out, wall, sched, _ = _continuous(fns, la, prompts, budgets, lanes,
+                                          prefix_cache=cached)
+        st = sched.stats
+        outs[mode] = [o.tokens for o in out]
+        tok = sum(len(t) for t in outs[mode])
+        tps[mode] = tok / wall
+        cell = {"tokens_per_s": round(tps[mode], 2),
+                "decode_steps": st.decode_steps,
+                "occupancy": round(st.occupancy, 3)}
+        if cached:
+            cell.update(
+                lookups=st.prefix_lookups, hits=st.prefix_hits,
+                hit_rate=round(st.prefix_hit_rate, 4),
+                hit_tokens=st.prefix_hit_tokens,
+                prompt_tokens=st.prefix_prompt_tokens,
+                prefill_tokens_saved=round(st.prefill_tokens_saved, 4),
+                cow_forks=st.prefix_cow_forks,
+                evicted_blocks=st.prefix_evicted_blocks,
+                resident_blocks=sched.prefix.n_blocks)
+        doc["cells"][mode] = cell
+    # --- losslessness: cache on == cache off == reference, per request
+    assert outs["cached"] == outs["uncached"], \
+        "prefix cache changed an output"
+    for q in range(min(3, len(prompts))):
+        ref = reference_decode(fns, prompts[q], budgets[q])
+        assert outs["cached"][q] == ref, \
+            f"prefix cache diverged from reference_decode on query {q}"
+    st = sched.stats
+    assert st.prefill_tokens_saved >= 0.30, \
+        f"prefix-heavy stream saved only {st.prefill_tokens_saved:.1%} " \
+        "of prefill tokens (expected >= 30%)"
+    emit("prefix_cache[off]", 0.0, f"{tps['uncached']:.1f} tok/s")
+    emit("prefix_cache[on]", 0.0,
+         f"{tps['cached']:.1f} tok/s | "
+         f"hit {st.prefix_hits}/{st.prefix_lookups} "
+         f"({st.prefix_hit_rate:.0%}) | "
+         f"saved {st.prefix_hit_tokens}/{st.prefix_prompt_tokens} prefill "
+         f"tokens ({st.prefill_tokens_saved:.0%}) | "
+         f"{st.prefix_cow_forks} COW forks | "
+         f"{st.prefix_evicted_blocks} evicted | lossless ✓")
+    emit("prefix_cache_speedup", 0.0,
+         f"{tps['cached'] / tps['uncached']:.2f}x")
+    doc["prefill_tokens_saved"] = round(st.prefill_tokens_saved, 4)
+    doc["speedup"] = round(tps["cached"] / tps["uncached"], 4)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {json_out}")
+    return doc
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -337,13 +437,25 @@ if __name__ == "__main__":
                     help="per-step latency breakdown (host draft / device "
                          "step / accept+commit / hidden), serial vs "
                          "--overlap-drafts, instead of the throughput sweep")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix-cache cell: a prefix-heavy stream "
+                         "(shared system prompt + per-request tails) with "
+                         "the cache off vs on; reports hit rate and "
+                         "prefill-tokens-saved, asserts bit-identical")
+    ap.add_argument("--shared-prefix", type=int, default=40,
+                    help="with --prefix-cache: shared system-prompt length")
     ap.add_argument("--json-out", default=None,
-                    help="with --breakdown: write the per-step records and "
-                         "per-cell means to this JSON file")
+                    help="with --breakdown / --prefix-cache: write the "
+                         "records and per-cell means to this JSON file")
     args = ap.parse_args()
     if args.breakdown:
         run_breakdown(n_queries=args.queries, max_new=args.max_new,
                       lanes=args.lanes, json_out=args.json_out)
+        raise SystemExit(0)
+    if args.prefix_cache:
+        run_prefix(n_queries=args.queries, max_new=args.max_new,
+                   lanes=args.lanes, shared_len=args.shared_prefix,
+                   json_out=args.json_out)
         raise SystemExit(0)
     names = (available_backends() if args.backends == "all"
              else tuple(args.backends.split(",")))

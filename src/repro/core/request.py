@@ -159,6 +159,15 @@ class StepFns:
     block_size: int = 0               # paged: KV rows per block
     n_blocks: Optional[int] = None    # paged: pool size (None = dense-equiv)
     reset_blocks: Optional[Callable] = None
+    # Prefix-cache extensions (paged only; DESIGN.md §Prefix cache):
+    # prefill_suffix(cache, lane, tokens(1,n), offset) -> (cache, chosen(1,))
+    #     — prefill only the uncached prompt tail, attending the shared
+    #     prefix blocks already wired into the lane's block table; the
+    #     wrapper pads n up to a fixed suffix bucket (compile-once).
+    # copy_block(cache, src, dst) -> cache — COW fork of a boundary block.
+    prefill_suffix: Optional[Callable] = None
+    copy_block: Optional[Callable] = None
+    suffix_buckets: Tuple[int, ...] = ()
     # --- request-centric API extensions
     # per_lane_params: prefill/prefill_into_slot/tree_step accept a trailing
     # ``lane_params`` dict of (B,) device vectors {greedy, temp, seed} so one
@@ -211,6 +220,8 @@ class GenStats:
     device_step_ms: float = 0.0    # dispatch -> packed result on host
     accept_commit_ms: float = 0.0  # accept bookkeeping + retire + tables
     host_syncs: int = 0
+    # prompt tokens served from the prefix cache (prefill compute skipped)
+    cached_prompt_tokens: int = 0
 
     @property
     def edl(self) -> float:

@@ -179,13 +179,13 @@ class FlashDecodeBackend:
                                  score_f32=cfg.attn_score_f32)
 
     def make_paged_tree_attend(self, cfg, block_tables, cache_lens,
-                               tree_mask):
+                               tree_mask, slot_valid=None):
         """The paged pool is lane-agnostic, so the sequence-parallel
         shard_map layout does not apply; delegate to the dense gather path
         (identical semantics, no mesh)."""
         from repro.models.attention import get_backend
         return get_backend("dense").make_paged_tree_attend(
-            cfg, block_tables, cache_lens, tree_mask)
+            cfg, block_tables, cache_lens, tree_mask, slot_valid)
 
 
 __all__ = ["make_flash_attend", "cache_partition_spec", "FlashDecodeBackend"]

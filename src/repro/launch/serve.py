@@ -131,7 +131,22 @@ def main() -> None:
                          "pool to the workload's worst-case footprint; the "
                          "dense-equivalent is lanes*ceil(max_seq_len/"
                          "block_size)+1)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix caching on the paged pool: "
+                         "admissions whose prompt prefix is already "
+                         "resident skip that portion of prefill "
+                         "(copy-on-write block sharing; bit-identical "
+                         "outputs)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=0,
+                    help="cap on blocks the prefix cache may keep resident "
+                         "(0 = bounded only by pool pressure)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request a shared system-prompt prefix "
+                         "of this many tokens (prefix-heavy traffic for "
+                         "--prefix-cache)")
     args = ap.parse_args()
+    if args.prefix_cache and args.kv_layout != "paged":
+        raise SystemExit("--prefix-cache requires --kv-layout paged")
     if args.kv_layout == "paged" and args.mode == "lockstep":
         raise SystemExit("--kv-layout paged requires --mode continuous "
                          "(the scheduler owns the block allocator)")
@@ -185,12 +200,19 @@ def main() -> None:
             max_new_tokens=args.max_new, sample=args.sample,
             temperature=args.temperature),
         draft_policy=draft_policy,
-        overlap_drafts=args.overlap_drafts)
+        overlap_drafts=args.overlap_drafts,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_blocks=args.prefix_cache_blocks or None)
     engine = build_engine(ecfg, cfg, params)
 
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
     prompt_cap = min(96, args.prefill_len)
-    reqs = [Request(prompt=corpus.sample()[0][:prompt_cap],
+    system_prompt = (corpus.sample()[0][:min(args.shared_prefix, prompt_cap)]
+                     if args.shared_prefix > 0 else [])
+    def _prompt():
+        tail_cap = max(prompt_cap - len(system_prompt), 1)
+        return list(system_prompt) + corpus.sample()[0][:tail_cap]
+    reqs = [Request(prompt=_prompt(),
                     params=_request_params(args, i),
                     metadata={"i": i, "tenant": f"t{i % 2}"})
             for i in range(args.requests)]
@@ -276,6 +298,14 @@ def main() -> None:
                  f"{st.block_waits} block-waits"
                  if args.kv_layout == "paged" else "")
         print(f"kv cache [{args.kv_layout}]: {cache_mb:.1f} MiB{extra}")
+    if args.prefix_cache:
+        print(f"prefix cache: {st.prefix_hits}/{st.prefix_lookups} hits "
+              f"({st.prefix_hit_rate:.0%}), "
+              f"{st.prefix_hit_tokens}/{st.prefix_prompt_tokens} prefill "
+              f"tokens saved ({st.prefill_tokens_saved:.0%}), "
+              f"{st.prefix_cow_forks} COW forks, "
+              f"{sched.prefix.n_blocks} resident blocks, "
+              f"{st.prefix_evicted_blocks} evicted")
     br = st.breakdown()
     mode = "overlap" if args.overlap_drafts else "serial"
     print(f"step breakdown [{mode}]: draft {br['host_draft_ms']:.2f} ms   "

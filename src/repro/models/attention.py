@@ -131,10 +131,17 @@ class AttentionBackend:
         return attend
 
     def _paged_geometry(self, cfg, block_tables: jax.Array,
-                        cache_lens: jax.Array, tree_mask: jax.Array):
+                        cache_lens: jax.Array, tree_mask: jax.Array,
+                        slot_valid=None):
         """Shared paged-decode precompute: the (B, T, S_virtual) full mask
         plus the physical rows for the draft-slot scatter and (for the
-        gather path) every logical position of every lane."""
+        gather path) every logical position of every lane.
+
+        slot_valid (B, T) bool: slots to actually scatter; invalid slots'
+        KV writes redirect to the NULL block (row 0).  Used by bucketed
+        suffix prefill, whose pad slots may sit past the lane's table
+        coverage where ``paged_row_index`` clipping would otherwise alias
+        them onto the last real block."""
         from repro.models.transformer import paged_row_index
         bs = cfg.kv_block_size
         B, T = tree_mask.shape[:2]
@@ -142,14 +149,16 @@ class AttentionBackend:
         full_mask = build_full_tree_mask(cache_lens, tree_mask, S_virtual)
         slots = cache_lens[:, None] + jnp.arange(T)[None, :]
         slot_rows = paged_row_index(block_tables, slots, bs)
+        if slot_valid is not None:
+            slot_rows = jnp.where(slot_valid, slot_rows, 0)
         all_pos = jnp.broadcast_to(jnp.arange(S_virtual)[None, :],
                                    (B, S_virtual))
         all_rows = paged_row_index(block_tables, all_pos, bs)
         return full_mask, slot_rows, all_rows, S_virtual
 
     def make_paged_tree_attend(self, cfg, block_tables: jax.Array,
-                               cache_lens: jax.Array, tree_mask: jax.Array
-                               ) -> Callable:
+                               cache_lens: jax.Array, tree_mask: jax.Array,
+                               slot_valid=None) -> Callable:
         """Tree-decode closure over the paged cache — per-layer caches are
         the (n_blocks, block_size, K, dh) block pool.  Reference semantics:
         gather each lane's blocks back into a contiguous (B, S_virtual)
@@ -157,7 +166,7 @@ class AttentionBackend:
         the streaming kernel; positions beyond a lane's coverage resolve to
         NULL-block garbage and are masked)."""
         full_mask, slot_rows, all_rows, S_virtual = self._paged_geometry(
-            cfg, block_tables, cache_lens, tree_mask)
+            cfg, block_tables, cache_lens, tree_mask, slot_valid)
         B = tree_mask.shape[0]
 
         def attend(q, k, v, k_cache, v_cache):
@@ -206,14 +215,14 @@ class PallasBackend(AttentionBackend):
         return attend
 
     def make_paged_tree_attend(self, cfg, block_tables, cache_lens,
-                               tree_mask):
+                               tree_mask, slot_valid=None):
         """Streaming paged decode: the kernel walks each lane's logical
         blocks and a scalar-prefetched block table steers the DMA to the
         physical block — no contiguous per-lane cache is ever materialized
         (the jnp.take of the dense path disappears into addressing)."""
         from repro.kernels.tree_attention.paged import paged_tree_attention
         full_mask, slot_rows, _, _ = self._paged_geometry(
-            cfg, block_tables, cache_lens, tree_mask)
+            cfg, block_tables, cache_lens, tree_mask, slot_valid)
 
         def attend(q, k, v, k_cache, v_cache):
             k_cache, v_cache = scatter_kv_paged(k_cache, v_cache, slot_rows,

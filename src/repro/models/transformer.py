@@ -590,6 +590,70 @@ def prefill_into_slot_paged(cfg: TransformerConfig, params: Params,
     return cache, _unembed(cfg, params, h_last)
 
 
+def prefill_from_offset_paged(cfg: TransformerConfig, params: Params,
+                              cache: Dict[str, jax.Array], slot: jax.Array,
+                              tokens: jax.Array, offset: jax.Array,
+                              lens: jax.Array
+                              ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Suffix prefill for prefix-cache hits: prefill only the uncached tail
+    of one request's prompt, attending the shared prefix blocks through
+    lane ``slot``'s block table.
+
+    tokens (1, Sb): the prompt suffix padded to a fixed bucket length;
+    offset (1,): cached prefix length (absolute position of tokens[0]);
+    lens (1,): real (un-padded) suffix length.
+
+    Implemented as a causally-masked tree step at cache_lens=offset: the
+    decode backend scatters the suffix KV at rows offset+i through the
+    block-table indirection and masks attention to past ∨ causal-within-
+    suffix — exactly what full prefill computes for those positions, so the
+    resulting KV (and logits) match the uncached path.  Pad slots scatter
+    to the NULL block (``slot_valid``) and are causally invisible to real
+    queries.  One executable per (bucket, lane-count) — lanes and offsets
+    are traced, so compile-once survives arbitrary hit patterns."""
+    B, Sb = tokens.shape
+    assert B == 1, "prefill_from_offset admits one request at a time"
+    bt_row = jax.lax.dynamic_index_in_dim(
+        cache["block_tables"], jnp.asarray(slot, jnp.int32), axis=0)  # (1,bpl)
+    positions = offset[:, None] + jnp.arange(Sb)[None, :]             # (1,Sb)
+    causal = jnp.broadcast_to(
+        jnp.tril(jnp.ones((Sb, Sb), bool)), (B, Sb, Sb))
+    valid = jnp.arange(Sb)[None, :] < lens[:, None]
+    backend = attn_backends.get_backend(cfg.decode_backend)
+    attend = backend.make_paged_tree_attend(
+        cfg, bt_row, jnp.asarray(offset, jnp.int32), causal, valid)
+
+    h = _embed(cfg, params, tokens)
+
+    def layer(cfg_, lp, h_, k_c, v_c):
+        return _layer_tree(cfg_, lp, h_, positions, k_c, v_c, attend)
+
+    h, kv = _scan_layers(cfg, params, h, layer,
+                         extra_xs=(cache["k"], cache["v"]), extra_args=(),
+                         alias_ys_to_xs=True)
+    new_cache = {"k": kv[0], "v": kv[1],
+                 "block_tables": cache["block_tables"]}
+    h_last = jnp.take_along_axis(
+        h, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return new_cache, _unembed(cfg, params, h_last)
+
+
+def copy_paged_block(cache: Dict[str, jax.Array], src: jax.Array,
+                     dst: jax.Array) -> Dict[str, jax.Array]:
+    """Device copy of one physical block (all layers, K and V) — the
+    copy-on-write fork of a partially-filled boundary block a prefix-cache
+    hit must extend.  Rows past the valid prefix are garbage in ``src`` and
+    stay garbage in ``dst`` until the suffix prefill overwrites them."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    out = dict(cache)
+    for name in ("k", "v"):
+        buf = cache[name]                                 # (L, nb, bs, K, dh)
+        blk = jax.lax.dynamic_slice_in_dim(buf, src, 1, axis=1)
+        out[name] = jax.lax.dynamic_update_slice_in_dim(buf, blk, dst, axis=1)
+    return out
+
+
 def tree_step_paged(cfg: TransformerConfig, params: Params,
                     cache: Dict[str, jax.Array], cache_lens: jax.Array,
                     tokens: jax.Array, positions: jax.Array,
@@ -788,5 +852,6 @@ __all__ = ["TransformerConfig", "Params", "init_params", "param_logical_axes",
            "prefill", "prefill_into_slot", "reset_slot", "tree_step",
            "commit_cache", "blocks_per_lane", "init_paged_cache",
            "paged_row_index", "prefill_paged", "prefill_into_slot_paged",
+           "prefill_from_offset_paged", "copy_paged_block",
            "tree_step_paged", "commit_paged_cache", "reset_blocks",
            "verify_accept_device", "pack_step_result"]

@@ -75,6 +75,13 @@ class EngineConfig:
     # drains inside the next step's flight window.  Bit-identical outputs
     # to the serial path (losslessness is draft- and timing-independent).
     overlap_drafts: bool = False
+    # radix-tree prefix caching over the paged pool (DESIGN.md §Prefix
+    # cache): requests whose prompt prefix is already resident skip that
+    # portion of prefill via refcounted copy-on-write block sharing.
+    # Outputs stay bit-identical to the uncached path.  prefix_cache_blocks
+    # caps the tree's resident blocks (None = bounded by pool pressure).
+    prefix_cache: bool = False
+    prefix_cache_blocks: Optional[int] = None
     # session defaults for requests submitted without their own params
     default_params: SamplingParams = field(default_factory=SamplingParams)
     # default speculation policy (draft sources / quotas / trie namespace /
@@ -111,6 +118,13 @@ class EngineConfig:
                              "'dense' or 'paged'")
         if self.kv_layout == "paged" and self.block_size < 1:
             raise ValueError(f"block_size={self.block_size}: need >= 1")
+        if self.prefix_cache and self.kv_layout != "paged":
+            raise ValueError("prefix_cache=True requires kv_layout='paged' "
+                             "(block sharing needs the paged pool)")
+        if self.prefix_cache_blocks is not None \
+                and self.prefix_cache_blocks < 0:
+            raise ValueError(
+                f"prefix_cache_blocks={self.prefix_cache_blocks}")
         if self.sampling not in ("mixed", "greedy"):
             raise ValueError(f"sampling={self.sampling!r}: expected 'mixed' "
                              "or 'greedy'")
@@ -262,7 +276,9 @@ class ServingEngine:
             scrub_freed=config.scrub_freed, trie=trie,
             default_params=config.default_params,
             draft_policy=config.draft_policy,
-            overlap_drafts=config.overlap_drafts)
+            overlap_drafts=config.overlap_drafts,
+            prefix_cache=config.prefix_cache,
+            prefix_cache_blocks=config.prefix_cache_blocks)
 
     # ---- request surface
     def submit(self, request: Union[Request, Sequence[int]],

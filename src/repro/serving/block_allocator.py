@@ -28,10 +28,23 @@ pool — which ``alloc`` enforces up front.
 
 Fragmentation in this design is purely *internal* (a request's last block is
 partially used); ``frag_rows``/``frag_rows_total`` account for it.
+
+Prefix sharing (PR 7) adds per-block refcounts on top: a block may be owned
+by several requests at once (same logical prefix positions in each table) and
+by the radix prefix cache (``cache_ref``/``cache_unref``).  ``free`` then
+returns only the blocks whose refcount actually dropped to zero — those are
+the only ones the caller may scrub or that re-enter the free list.  Blocks
+held *only* by the prefix cache (``n_cache_only``) are not reservable, so the
+reservation invariant becomes
+
+    sum(reserved demand) + n_cache_only <= capacity
+
+Reservations deliberately over-count shared blocks (every sharer counts them
+in full), which keeps the no-starvation guarantee conservative.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence
 
 NULL_BLOCK = 0
 
@@ -73,6 +86,11 @@ class BlockAllocator:
         self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
         self._reserved: Dict[int, int] = {}
+        # Per-block owner count.  Owners are (a) each request whose table
+        # contains the block and (b) the prefix cache (at most once per
+        # block, tracked in _cache_held).  Absent key == free (refcount 0).
+        self._ref: Dict[int, int] = {}
+        self._cache_held: set = set()
 
     # ------------------------------------------------------------------ state
     @property
@@ -95,9 +113,22 @@ class BlockAllocator:
         return sum(self._reserved.values())
 
     @property
+    def n_cache_only(self) -> int:
+        """Blocks held *only* by the prefix cache (in no live table).  These
+        occupy pool space without backing any reservation, so they reduce
+        what new admissions may reserve; they become reservable again the
+        moment the cache evicts them (or a live request shares them, at
+        which point the sharer's reservation covers them)."""
+        return sum(1 for b in self._cache_held if self._ref.get(b, 0) == 1)
+
+    @property
     def available(self) -> int:
         """Blocks still reservable by new admissions."""
-        return self.capacity - self.n_reserved
+        return self.capacity - self.n_reserved - self.n_cache_only
+
+    def refcount(self, block: int) -> int:
+        """Current owner count of a physical block (0 == free)."""
+        return self._ref.get(int(block), 0)
 
     def table(self, rid: int) -> List[int]:
         return list(self._tables[rid])
@@ -119,11 +150,16 @@ class BlockAllocator:
         return 0 < demand_blocks <= self.available
 
     def alloc(self, rid: int, n_initial: int, *,
-              reserve: Optional[int] = None) -> List[int]:
+              reserve: Optional[int] = None,
+              shared: Optional[Sequence[int]] = None) -> List[int]:
         """Admit ``rid``: reserve its worst-case demand and hand out the
-        first ``n_initial`` physical blocks."""
+        first ``n_initial`` physical blocks.  ``shared`` (prefix-cache hits)
+        are adopted at the head of the table by refcount increment — they
+        count against the reservation like any other block but consume no
+        free-list entry.  Returns the freshly allocated ids only."""
         if rid in self._tables:
             raise ValueError(f"request {rid} already has a block table")
+        shared = list(shared) if shared else []
         reserve = n_initial if reserve is None else int(reserve)
         if reserve < n_initial:
             raise ValueError(f"reserve={reserve} < n_initial={n_initial}")
@@ -136,9 +172,32 @@ class BlockAllocator:
             raise RuntimeError(
                 f"cannot admit request {rid}: demand {reserve} blocks, "
                 f"available {self.available} (backpressure)")
+        if n_initial < len(shared):
+            raise ValueError(f"n_initial={n_initial} < {len(shared)} shared")
         self._reserved[rid] = reserve
         self._tables[rid] = []
-        return self.extend(rid, n_initial)
+        if shared:
+            self.share(rid, shared)
+        return self.extend(rid, n_initial - len(shared))
+
+    def share(self, rid: int, blocks: Sequence[int]) -> None:
+        """Append already-resident blocks to ``rid``'s table (refcount++).
+        The blocks must be live (refcount > 0) — sharing a free block would
+        hand out rows another admission can claim."""
+        table = self._tables.get(rid)
+        if table is None:
+            raise KeyError(f"unknown request {rid}")
+        blocks = [int(b) for b in blocks]
+        for b in blocks:
+            if self._ref.get(b, 0) <= 0:
+                raise ValueError(f"block {b} is not live; cannot share")
+        if len(table) + len(blocks) > self._reserved[rid]:
+            raise RuntimeError(
+                f"request {rid}: sharing {len(blocks)} blocks exceeds its "
+                f"reservation of {self._reserved[rid]}")
+        for b in blocks:
+            self._ref[b] += 1
+            table.append(b)
 
     def extend(self, rid: int, n_more: int) -> List[int]:
         """Grow ``rid``'s table by ``n_more`` physical blocks.  Never fails
@@ -155,21 +214,76 @@ class BlockAllocator:
                 f"exceeds its reservation of {self._reserved[rid]}")
         assert n_more <= len(self._free), "reservation invariant violated"
         new = [self._free.pop() for _ in range(n_more)]
+        for b in new:
+            assert self._ref.get(b, 0) == 0, f"free-list block {b} is live"
+            self._ref[b] = 1
         table.extend(new)
         return new
 
+    def fork_cow(self, rid: int, src_block: int) -> int:
+        """Copy-on-write fork: allocate a fresh block (from ``rid``'s own
+        reservation) destined to receive a device copy of ``src_block`` — a
+        partially-filled boundary block whose KV rows ``rid`` shares but
+        must extend.  The source must be live (shared or cache-held); the
+        caller performs the actual device copy and the suffix overwrite."""
+        src_block = int(src_block)
+        if self._ref.get(src_block, 0) <= 0:
+            raise ValueError(f"block {src_block} is not live; nothing to fork")
+        return self.extend(rid, 1)[0]
+
     def free(self, rid: int) -> List[int]:
-        """Retire ``rid``: return its physical blocks to the free list and
-        release its reservation.  Returns the freed ids so the caller can
-        scrub them BEFORE they are re-allocated (reset-slot hygiene: once a
-        freed block is handed to a new request, zeroing it would destroy the
-        new request's KV)."""
+        """Retire ``rid``: drop one reference on each of its physical blocks
+        and release its reservation.  Returns ONLY the blocks whose refcount
+        reached zero — blocks still shared with the prefix cache or with a
+        co-resident request stay out of the free list, so the caller can
+        never scrub or re-allocate KV another owner depends on.  Freed ids
+        must be scrubbed BEFORE re-allocation (reset-slot hygiene)."""
         table = self._tables.pop(rid, None)
         if table is None:
             raise KeyError(f"unknown request {rid}")
         del self._reserved[rid]
-        self._free.extend(table)
-        return table
+        freed: List[int] = []
+        for b in table:
+            n = self._ref[b] - 1
+            if n == 0:
+                del self._ref[b]
+                freed.append(b)
+            else:
+                self._ref[b] = n
+        self._free.extend(freed)
+        return freed
+
+    # ---------------------------------------------------------- prefix cache
+    def cache_ref(self, blocks: Iterable[int]) -> None:
+        """The prefix cache takes (at most one) ownership reference on each
+        block, pinning it out of the free list across request retirement."""
+        for b in blocks:
+            b = int(b)
+            if b in self._cache_held:
+                raise ValueError(f"block {b} already cache-held")
+            if self._ref.get(b, 0) <= 0:
+                raise ValueError(f"block {b} is not live; cannot cache_ref")
+            self._ref[b] += 1
+            self._cache_held.add(b)
+
+    def cache_unref(self, blocks: Iterable[int]) -> List[int]:
+        """Release the prefix cache's reference (eviction).  Returns the
+        blocks that became free as a result — the caller must scrub those
+        before they can be re-allocated."""
+        freed: List[int] = []
+        for b in blocks:
+            b = int(b)
+            if b not in self._cache_held:
+                raise ValueError(f"block {b} is not cache-held")
+            self._cache_held.discard(b)
+            n = self._ref[b] - 1
+            if n == 0:
+                del self._ref[b]
+                freed.append(b)
+            else:
+                self._ref[b] = n
+        self._free.extend(freed)
+        return freed
 
     # ---------------------------------------------------------- fragmentation
     def frag_rows(self, rid: int, used_rows: int) -> int:

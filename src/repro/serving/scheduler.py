@@ -79,6 +79,7 @@ from repro.core.strategies import LookaheadConfig
 from repro.core.trie import TrieTree
 from repro.core.verify import verify_accept_batch
 from repro.serving.block_allocator import BlockAllocator, demand_blocks
+from repro.serving.prefix_cache import PrefixCache
 
 if TYPE_CHECKING:   # avoid a load-time cycle: api.py imports the scheduler
     from repro.serving.api import RequestHandle
@@ -104,10 +105,27 @@ class SchedulerStats:
         #                              flight on device (overlap mode only)
         self.host_syncs = 0          # every device->host pull the loop makes
         self.decode_syncs = 0        # pulls on the decode hot path only
+        # ---- prefix cache (zeros when disabled)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0          # admissions with >= 1 cached token
+        self.prefix_hit_tokens = 0    # prompt tokens whose prefill was skipped
+        self.prefix_prompt_tokens = 0  # prompt tokens presented to lookup
+        self.prefix_cow_forks = 0
+        self.prefix_evicted_blocks = 0
 
     @property
     def occupancy(self) -> float:
         return self.active_lane_steps / max(self.decode_steps * self.lanes, 1)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of looked-up admissions that matched a cached prefix."""
+        return self.prefix_hits / max(self.prefix_lookups, 1)
+
+    @property
+    def prefill_tokens_saved(self) -> float:
+        """Fraction of presented prompt tokens served from the cache."""
+        return self.prefix_hit_tokens / max(self.prefix_prompt_tokens, 1)
 
     @property
     def syncs_per_decode_step(self) -> float:
@@ -140,7 +158,9 @@ class ContinuousScheduler:
                  draft_policy: Optional[DraftPolicy] = None,
                  sources: Optional[Dict[str, DraftSource]] = None,
                  overlap_drafts: bool = False,
-                 record_breakdown: bool = False):
+                 record_breakdown: bool = False,
+                 prefix_cache: bool = False,
+                 prefix_cache_blocks: Optional[int] = None):
         if not fns.supports_slot_serving:
             raise ValueError("StepFns lack prefill_into_slot/init_cache; "
                              "continuous batching needs per-slot admission")
@@ -220,6 +240,22 @@ class ContinuousScheduler:
             self.allocator = BlockAllocator(nb, fns.block_size)
             self.tables = np.zeros((self.lanes, bpl), dtype=np.int32)
             self._tables_dirty = True
+        # ---- radix prefix cache (DESIGN.md §Prefix cache): lookup at
+        # admission, insert at retire; shares pool blocks by refcount.
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            if self.allocator is None:
+                raise ValueError("prefix_cache requires kv_layout='paged' "
+                                 "(block sharing needs the paged pool)")
+            if fns.prefill_suffix is None or fns.copy_block is None:
+                raise ValueError("these StepFns lack prefill_suffix/"
+                                 "copy_block; rebuild the session to enable "
+                                 "the prefix cache")
+            self.prefix = PrefixCache(self.allocator,
+                                      max_blocks=prefix_cache_blocks)
+        # transient per-admission hit info: rid -> (n_cached, cow_src,
+        # cow_dst); written by _claim_blocks, consumed by the same _admit
+        self._hits: Dict[int, tuple] = {}
 
     # ------------------------------------------------------------------ state
     @property
@@ -287,20 +323,76 @@ class ContinuousScheduler:
 
     def _claim_blocks(self, rs: RequestState, lane: int) -> bool:
         """Reserve + allocate initial blocks for ``rs``; False = not enough
-        reservable blocks right now (request stays queued — backpressure)."""
+        reservable blocks right now (request stays queued — backpressure).
+
+        With the prefix cache enabled: look up the prompt first and PIN the
+        matched nodes, so the eviction pass that makes room for this very
+        admission cannot evict the blocks it is about to share; adopt
+        matched full blocks into the table head by refcount, allocate a COW
+        fork target for a partially-matched boundary block, and only then
+        take fresh blocks for the uncached tail."""
         demand = self._demand_blocks(len(rs.prompt), rs.max_new_tokens)
+        match = None
+        if self.prefix is not None:
+            match = self.prefix.lookup(rs.prompt,
+                                       namespace=rs.draft.namespace)
+            self.stats.prefix_lookups += 1
+            self.stats.prefix_prompt_tokens += len(rs.prompt)
         if not self.allocator.can_admit(demand):
-            self.stats.block_waits += 1
-            return False
+            # cache-only blocks are reclaimable: LRU-evict before declaring
+            # backpressure (matched nodes are pinned, so a hit keeps its
+            # shared blocks even under pool pressure)
+            if self.prefix is not None:
+                evicted = self.prefix.evict(demand)
+                self.stats.prefix_evicted_blocks += len(evicted)
+                self._scrub_blocks(evicted)
+            if not self.allocator.can_admit(demand):
+                if match is not None:
+                    self.prefix.unpin(match)
+                self.stats.block_waits += 1
+                return False
         initial = min(self.allocator.blocks_for_tokens(
             len(rs.prompt) + self.width), demand)
-        ids = self.allocator.alloc(rs.rid, initial, reserve=demand)
+        shared = match.blocks if match is not None else []
+        cow_dst = None
+        if match is not None and match.cow_block is not None:
+            self.allocator.alloc(rs.rid, len(shared), reserve=demand,
+                                 shared=shared)
+            cow_dst = self.allocator.fork_cow(rs.rid, match.cow_block)
+            self.allocator.extend(rs.rid, initial - len(shared) - 1)
+        else:
+            self.allocator.alloc(rs.rid, initial, reserve=demand,
+                                 shared=shared)
+        if match is not None:
+            self.prefix.unpin(match)
+            if match.n_tokens > 0:
+                rs.stats.cached_prompt_tokens = match.n_tokens
+                self.stats.prefix_hits += 1
+                self.stats.prefix_hit_tokens += match.n_tokens
+                self.stats.prefix_cow_forks += int(cow_dst is not None)
+                self._hits[rs.rid] = (match.n_tokens, match.cow_block,
+                                      cow_dst)
+        table = self.allocator.table(rs.rid)
         self.tables[lane, :] = 0
-        self.tables[lane, :len(ids)] = ids
+        self.tables[lane, :len(table)] = table
         self._tables_dirty = True
         self.stats.peak_blocks = max(self.stats.peak_blocks,
                                      self.allocator.n_allocated)
         return True
+
+    def _scrub_blocks(self, freed: Sequence[int]) -> None:
+        """Zero freed blocks on device (hygiene) — only ids whose refcount
+        actually reached zero may ever be passed here.  Chunked to the
+        block-table width so one reset executable serves every call."""
+        if not (self.scrub_freed and freed and self.cache is not None
+                and self.fns.reset_blocks is not None):
+            return
+        bpl = self.fns.blocks_per_lane
+        for i in range(0, len(freed), bpl):
+            ids = np.zeros((bpl,), dtype=np.int32)
+            chunk = freed[i:i + bpl]
+            ids[:len(chunk)] = np.asarray(chunk, dtype=np.int32)
+            self.cache = self.fns.reset_blocks(self.cache, ids)
 
     def _sync_tables(self) -> None:
         """Push host-side block-table edits into the device cache dict (the
@@ -432,19 +524,35 @@ class ContinuousScheduler:
                 rs.admit_t = time.perf_counter()
                 self._set_lane_params(lane, rs.params)
                 self._observe_prompt(rs)
-                toks = np.full((1, self.prefill_len), fns.pad_id,
-                               dtype=np.int32)
-                toks[0, :len(rs.prompt)] = np.asarray(rs.prompt,
-                                                      dtype=np.int32)
-                plen = np.asarray([len(rs.prompt)], dtype=np.int32)
                 self._sync_tables()
-                if fns.per_lane_params:
-                    self.cache, chosen = fns.prefill_into_slot(
-                        self.cache, lane, toks, plen,
+                hit = self._hits.pop(rs.rid, None)
+                if hit is not None:
+                    # prefix-cache hit: COW-fork the boundary block if the
+                    # match ends mid-block, then prefill only the uncached
+                    # suffix (the shared blocks are already wired into the
+                    # lane's table, so attention sees the full prefix)
+                    n_cached, cow_src, cow_dst = hit
+                    if cow_dst is not None:
+                        self.cache = fns.copy_block(self.cache, cow_src,
+                                                    cow_dst)
+                    suffix = np.asarray([rs.prompt[n_cached:]],
+                                        dtype=np.int32)
+                    self.cache, chosen = fns.prefill_suffix(
+                        self.cache, lane, suffix, n_cached,
                         lane_params=self._lane_params_one(rs.params))
                 else:
-                    self.cache, chosen = fns.prefill_into_slot(
-                        self.cache, lane, toks, plen)
+                    toks = np.full((1, self.prefill_len), fns.pad_id,
+                                   dtype=np.int32)
+                    toks[0, :len(rs.prompt)] = np.asarray(rs.prompt,
+                                                          dtype=np.int32)
+                    plen = np.asarray([len(rs.prompt)], dtype=np.int32)
+                    if fns.per_lane_params:
+                        self.cache, chosen = fns.prefill_into_slot(
+                            self.cache, lane, toks, plen,
+                            lane_params=self._lane_params_one(rs.params))
+                    else:
+                        self.cache, chosen = fns.prefill_into_slot(
+                            self.cache, lane, toks, plen)
                 if self.overlap_drafts:
                     # leave the prefill in flight: its first-token pull is
                     # deferred until _decode has built the other lanes'
@@ -790,15 +898,26 @@ class ContinuousScheduler:
     def _finish_retire(self, rs: RequestState) -> RequestResult:
         self._retire_sources(rs)
         if self.allocator is not None:
+            # Promote the prompt's blocks into the prefix cache BEFORE the
+            # free: the tree takes its own reference on each adopted block,
+            # so the free below just drops this request's reference and the
+            # cached KV stays resident.  Cancelled requests may have been
+            # torn down before their prefill landed — skip them.
+            if self.prefix is not None and not rs.cancelled and rs.prompt:
+                nb_prompt = self.allocator.blocks_for_tokens(len(rs.prompt))
+                table = self.allocator.table(rs.rid)
+                self._scrub_blocks(self.prefix.insert(
+                    rs.prompt, table[:nb_prompt],
+                    namespace=rs.draft.namespace))
             # free-list first, scrub second — but always BEFORE the next
             # admission can reach the allocator, so a scrub can never hit a
-            # block that already belongs to a newly admitted request
+            # block that already belongs to a newly admitted request.
+            # ``free`` returns ONLY refcount-zero blocks: ids still shared
+            # with the prefix cache or a co-resident request are never
+            # scrubbed or re-allocated here (satellite: refcount-aware
+            # deferred retirement).
             freed = self.allocator.free(rs.rid)
-            if (self.scrub_freed and freed and self.cache is not None
-                    and self.fns.reset_blocks is not None):
-                ids = np.zeros((self.fns.blocks_per_lane,), dtype=np.int32)
-                ids[:len(freed)] = np.asarray(freed, dtype=np.int32)
-                self.cache = self.fns.reset_blocks(self.cache, ids)
+            self._scrub_blocks(freed)
         self._stamp_breakdown(rs)
         res = rs.result()
         self.results[rs.rid] = res

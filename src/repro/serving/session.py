@@ -200,6 +200,53 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
         def _reset_blocks(cache, block_ids):
             return tx.reset_blocks(cache, block_ids)
 
+        # Prefix-cache device surface.  ONE jitted suffix prefill serves
+        # every bucket: jax.jit keys its executable cache on the padded
+        # token shape, so the compile count equals the number of distinct
+        # buckets actually used — never the number of requests (lane and
+        # offset are traced scalars).
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _prefill_suffix(cache, slot, tokens, offset, slen, lane_params):
+            cache, last_logits = tx.prefill_from_offset_paged(
+                cfg, params, cache, slot, tokens, offset, slen)
+            lg = last_logits[:, None, :]
+            if logits_transform is not None:
+                last_tok = jnp.take_along_axis(tokens, (slen - 1)[:, None],
+                                               axis=1)
+                lg = logits_transform(lg, last_tok,
+                                      (offset + slen - 1)[:, None])
+            return cache, _choose(lg, (offset + slen)[:, None],
+                                  lane_params)[:, 0]
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _copy_block(cache, src, dst):
+            return tx.copy_paged_block(cache, src, dst)
+
+        _cap = int(prefill_len) if prefill_len else cfg.max_seq_len
+        suffix_buckets, _b = [], 8
+        while _b < _cap:
+            suffix_buckets.append(_b)
+            _b *= 2
+        suffix_buckets.append(_cap)
+        suffix_buckets = tuple(suffix_buckets)
+
+        def prefill_suffix(cache, slot, tokens, offset, lane_params=None):
+            """tokens (1, n): the UN-padded prompt suffix; offset: cached
+            prefix length.  Pads n up to the smallest suffix bucket."""
+            tokens = np.asarray(tokens, np.int32)
+            n = tokens.shape[1]
+            bucket = next(b for b in suffix_buckets if b >= n)
+            padded = np.full((1, bucket), pad_id, np.int32)
+            padded[0, :n] = tokens[0]
+            if lane_params is None:
+                lane_params = _default_lane_params(1)
+            return _prefill_suffix(cache, slot, padded,
+                                   np.asarray([offset], np.int32),
+                                   np.asarray([n], np.int32), lane_params)
+
+        def copy_block(cache, src, dst):
+            return _copy_block(cache, np.int32(src), np.int32(dst))
+
         def _init_cache(lanes: int):
             return tx.init_paged_cache(cfg, lanes, n_blocks)
 
@@ -238,6 +285,10 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                        reset_slot=None, prefill_len=prefill_len,
                        kv_layout="paged", block_size=cfg.kv_block_size,
                        n_blocks=n_blocks, reset_blocks=_reset_blocks,
+                       prefill_suffix=_expose(prefill_suffix,
+                                              _prefill_suffix),
+                       copy_block=_expose(copy_block, _copy_block),
+                       suffix_buckets=suffix_buckets,
                        per_lane_params=True, session_defaults=defaults,
                        sampling=sampling)
 

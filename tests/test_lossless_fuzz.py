@@ -214,3 +214,48 @@ def test_fuzz_draft_sources_lossless(seed, combo_idx, adaptive):
             i = rid_to_idx[r.rid]
             assert r.tokens == _ref(cell, prompts[i], budgets[i]), \
                 (cell, seed, sources, i)
+
+
+# ----------------------------------------------- prefix-cache fuzz (ISSUE 7)
+@pytest.mark.prefix
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 1), st.integers(0, 1))
+def test_fuzz_prefix_cache_lossless(seed, bs_idx, overlap):
+    """Random shared-prefix prompt sets (a common head + random tails, plus
+    divergent miss traffic) through the paged cells with the radix prefix
+    cache on and off: block sharing, COW boundary forks and suffix prefill
+    may never change a single token — both modes must equal reference_decode
+    and each other."""
+    rng = np.random.RandomState(seed % 2**31)
+    block_size = BLOCK_SIZES[bs_idx]
+    shared = rng.randint(1, VOCAB - 1,
+                         size=int(rng.randint(4, PREFILL - 10))).tolist()
+    n_req = int(rng.randint(2, 6))
+    prompts = [shared + rng.randint(
+        1, VOCAB - 1, size=rng.randint(1, PREFILL - len(shared))).tolist()
+        for _ in range(n_req)]
+    prompts.append(rng.randint(1, VOCAB - 1, size=8).tolist())  # miss traffic
+    budgets = [int(rng.randint(1, 14)) for _ in prompts]
+    lanes = int(rng.randint(1, 3))
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
+    for backend in ("dense", "pallas"):
+        cell = ("paged", backend, block_size)
+        fns = _get_fns(*cell)
+        outs = {}
+        for cached in (False, True):
+            sched = ContinuousScheduler(fns, la, lanes=lanes,
+                                        prefill_len=PREFILL,
+                                        overlap_drafts=bool(overlap),
+                                        prefix_cache=cached)
+            rid_to_idx = {sched.submit(p, m): i
+                          for i, (p, m) in enumerate(zip(prompts, budgets))}
+            res = sched.run()
+            assert len(res) == len(prompts)
+            got = [None] * len(prompts)
+            for r in res:
+                i = rid_to_idx[r.rid]
+                got[i] = r.tokens
+                assert r.tokens == _ref(cell, prompts[i], budgets[i]), \
+                    (cell, seed, cached, i)
+            outs[cached] = got
+        assert outs[True] == outs[False], (cell, seed)

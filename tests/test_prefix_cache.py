@@ -1,0 +1,344 @@
+"""Radix prefix cache: tree insert/lookup/upgrade, COW boundary forks, LRU
+eviction under pool pressure, allocator refcount invariants, namespace
+isolation — and scheduler integration (bit-identical serving with the cache
+on vs off vs reference_decode, refcount-aware scrub on finish→admit
+interleave, compile-once suffix buckets)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import reference_decode
+from repro.core.draft_sources import DraftPolicy
+from repro.core.request import Request, SamplingParams
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.api import EngineConfig, build_engine
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.prefix_cache import PrefixCache
+
+pytestmark = pytest.mark.prefix
+
+BS = 4
+
+
+def toks(*vals):
+    return list(vals)
+
+
+def _alloc_with(a, rid, tokens, reserve=None):
+    """Allocate enough blocks for ``tokens`` under ``rid``."""
+    n = -(-len(tokens) // a.block_size)
+    return a.alloc(rid, n, reserve=reserve)
+
+
+# --------------------------------------------------------------- allocator refs
+def test_share_and_refcounted_free():
+    a = BlockAllocator(n_blocks=10, block_size=BS)
+    ids = a.alloc(1, 3)
+    a.alloc(2, 0, reserve=4)
+    a.share(2, ids[:2])
+    assert a.refcount(ids[0]) == 2 and a.refcount(ids[2]) == 1
+    # freeing the first owner releases only the unshared block
+    assert a.free(1) == [ids[2]]
+    assert a.refcount(ids[0]) == 1
+    # second owner's free releases the rest
+    assert sorted(a.free(2)) == sorted(ids[:2])
+    assert a.n_free == a.capacity
+
+
+def test_share_rejects_free_blocks_and_overreservation():
+    a = BlockAllocator(n_blocks=10, block_size=BS)
+    ids = a.alloc(1, 2)
+    a.free(1)
+    a.alloc(2, 0, reserve=1)
+    with pytest.raises(ValueError):
+        a.share(2, [ids[0]])        # not live anymore
+    live = a.alloc(3, 1)
+    with pytest.raises(RuntimeError):
+        a.share(2, [live[0], live[0]])   # exceeds rid 2's reservation
+
+
+def test_cache_ref_pins_blocks_out_of_free_list():
+    a = BlockAllocator(n_blocks=10, block_size=BS)
+    ids = a.alloc(1, 3)
+    a.cache_ref(ids[:2])
+    assert a.free(1) == [ids[2]]           # cache-held ids stay live
+    assert a.n_cache_only == 2
+    assert a.available == a.capacity - 2   # cache residency is not reservable
+    freed = a.cache_unref(ids[:2])
+    assert sorted(freed) == sorted(ids[:2])
+    assert a.n_cache_only == 0 and a.n_free == a.capacity
+    with pytest.raises(ValueError):
+        a.cache_unref([ids[0]])            # double unref
+
+
+def test_cache_ref_is_single_ownership():
+    a = BlockAllocator(n_blocks=10, block_size=BS)
+    ids = a.alloc(1, 1)
+    a.cache_ref(ids)
+    with pytest.raises(ValueError):
+        a.cache_ref(ids)                   # at most one cache reference
+
+
+def test_fork_cow_allocates_from_own_reservation():
+    a = BlockAllocator(n_blocks=10, block_size=BS)
+    src = a.alloc(1, 1)[0]
+    a.alloc(2, 0, reserve=2)
+    dst = a.fork_cow(2, src)
+    assert dst != src and a.table(2) == [dst]
+    assert a.refcount(src) == 1            # fork does NOT share the source
+    with pytest.raises(ValueError):
+        a.fork_cow(2, 9)                   # free block: nothing to fork
+
+
+def test_shared_blocks_not_double_freed():
+    a = BlockAllocator(n_blocks=10, block_size=BS)
+    ids = a.alloc(1, 2)
+    a.cache_ref(ids)
+    for rid in (2, 3):
+        a.alloc(rid, 0, reserve=3)
+        a.share(rid, ids)
+    assert a.refcount(ids[0]) == 4     # rid 1 + cache + rid 2 + rid 3
+    assert a.free(2) == [] and a.free(3) == [] and a.free(1) == []
+    freed = a.cache_unref(ids)
+    assert sorted(freed) == sorted(ids)
+    assert a.n_free == a.capacity          # every block back exactly once
+
+
+# ------------------------------------------------------------------- radix tree
+def _tree(n_blocks=32):
+    a = BlockAllocator(n_blocks=n_blocks, block_size=BS)
+    return PrefixCache(a), a
+
+
+def test_insert_then_lookup_full_blocks():
+    pc, a = _tree()
+    prompt = list(range(10, 19))                 # 9 tokens: 2 full + 1 part
+    blocks = _alloc_with(a, 1, prompt)
+    pc.insert(prompt, blocks)
+    assert pc.n_blocks == 3
+    # same prompt again: full blocks shared, boundary block COW-forked,
+    # capped one short of the full prompt
+    m = pc.lookup(prompt)
+    assert m.blocks == blocks[:2]
+    # boundary leaf holds 1 token; the cap (len-1 == 8) forbids using it
+    assert m.cow_block is None and m.cow_tokens == 0
+    assert m.n_tokens == len(prompt) - 1
+    pc.unpin(m)
+
+
+def test_lookup_misses_on_cold_tree_and_divergence():
+    pc, a = _tree()
+    prompt = list(range(20, 32))
+    blocks = _alloc_with(a, 1, prompt)
+    pc.insert(prompt, blocks)
+    assert pc.lookup(list(range(50, 60))).n_tokens == 0
+    # divergence inside the second block: only the first block shared, the
+    # second becomes a COW fork up to the divergence point
+    other = prompt[:6] + [99] * 6
+    m = pc.lookup(other)
+    assert m.blocks == blocks[:1]
+    assert m.cow_block == blocks[1] and m.cow_tokens == 2
+    assert m.n_tokens == 6
+    pc.unpin(m)
+
+
+def test_insert_dedup_keeps_tree_blocks():
+    pc, a = _tree()
+    prompt = list(range(8))
+    b1 = _alloc_with(a, 1, prompt)
+    pc.insert(prompt, b1)
+    b2 = _alloc_with(a, 2, prompt)
+    pc.insert(prompt, b2)                        # same path: no new adoption
+    assert pc.n_blocks == 2
+    m = pc.lookup(prompt + [7])
+    assert m.blocks == b1                        # the ORIGINAL blocks
+    pc.unpin(m)
+    assert a.refcount(b2[0]) == 1                # rid 2 still sole owner
+
+
+def test_insert_upgrades_partial_leaf():
+    pc, a = _tree()
+    short = list(range(6))                       # 1 full + 2-token partial
+    b1 = _alloc_with(a, 1, short)
+    pc.insert(short, b1)
+    longer = list(range(8)) + [70, 71]           # extends through that block
+    b2 = _alloc_with(a, 2, longer)
+    pc.insert(longer, b2)
+    a.free(1)
+    # the partial leaf was upgraded to rid 2's fuller block and gained a child
+    m = pc.lookup(longer + [9])
+    assert m.blocks == [b1[0], b2[1]] and m.cow_block == b2[2]
+    pc.unpin(m)
+    assert a.refcount(b1[1]) == 0                # old partial: released
+
+
+def test_namespace_isolation():
+    pc, a = _tree()
+    prompt = list(range(12))
+    b1 = _alloc_with(a, 1, prompt)
+    pc.insert(prompt, b1, namespace="tenant-a")
+    assert pc.lookup(prompt, namespace="tenant-b").n_tokens == 0
+    assert pc.lookup(prompt, namespace="").n_tokens == 0
+    m = pc.lookup(prompt, namespace="tenant-a")
+    assert m.n_tokens == len(prompt) - 1
+    pc.unpin(m)
+
+
+def test_lru_eviction_under_pool_pressure_spares_pinned():
+    a = BlockAllocator(n_blocks=5, block_size=BS)    # capacity 4 (NULL excl.)
+    pc = PrefixCache(a)
+    old = list(range(100, 108))
+    new = list(range(200, 208))
+    pc.insert(old, _alloc_with(a, 1, old))
+    pc.insert(new, _alloc_with(a, 2, new))
+    a.free(1), a.free(2)
+    assert a.available == 0 and pc.n_blocks == 4
+    m = pc.lookup(new)                   # pins the 'new' path
+    freed = pc.evict(2)                  # must take the LRU ('old') leaves
+    assert len(freed) == 2 and a.available == 2
+    assert pc.lookup(old).n_tokens == 0  # 'old' gone ...
+    assert m.blocks and all(a.refcount(b) > 0 for b in m.blocks)  # 'new' not
+    pc.unpin(m)
+
+
+def test_max_blocks_cap_trims_lru():
+    a = BlockAllocator(n_blocks=32, block_size=BS)
+    pc = PrefixCache(a, max_blocks=3)
+    p1, p2 = list(range(8)), list(range(50, 58))
+    pc.insert(p1, _alloc_with(a, 1, p1))
+    pc.insert(p2, _alloc_with(a, 2, p2))
+    assert pc.n_blocks <= 3
+    assert pc.lookup(p2).n_tokens > 0    # the most recent insert survived
+
+
+# ------------------------------------------------------ serving integration
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = TransformerConfig(vocab_size=128, d_model=64, n_layers=2,
+                            n_heads=4, n_kv_heads=2, d_ff=128,
+                            max_seq_len=256, kv_layout="paged",
+                            kv_block_size=16)
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _serve(cfg, params, prompts, *, prefix_cache, overlap=False,
+           n_blocks=None, scrub=True, decode_backend=None, namespaces=None,
+           max_new=10):
+    ecfg = EngineConfig(lanes=2, prefill_len=64, decoding_length=4,
+                        branch_length=4, kv_layout="paged", block_size=16,
+                        scrub_freed=scrub, prefix_cache=prefix_cache,
+                        overlap_drafts=overlap, n_blocks=n_blocks,
+                        decode_backend=decode_backend,
+                        default_params=SamplingParams(max_new_tokens=max_new))
+    eng = build_engine(ecfg, cfg, params)
+    handles = []
+    for i, p in enumerate(prompts):
+        draft = (DraftPolicy(namespace=namespaces[i]) if namespaces
+                 else None)
+        sp = SamplingParams(max_new_tokens=max_new, draft=draft)
+        handles.append(eng.submit(Request(prompt=p, params=sp)))
+    eng.run()
+    return [h.result().tokens for h in handles], eng
+
+
+def _shared_prompts(n, seed=0, shared_len=40, tail=12):
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(1, 128, size=shared_len).tolist()
+    return [shared + rng.randint(1, 128, size=tail).tolist()
+            for _ in range(n)]
+
+
+def test_serving_bit_identical_and_saves_prefill(small_model):
+    cfg, params = small_model
+    prompts = _shared_prompts(6) + [list(range(1, 31))]   # hits + one miss
+    off, _ = _serve(cfg, params, prompts, prefix_cache=False)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True)
+    assert on == off
+    st = eng.stats
+    assert st.prefix_hits >= 3 and st.prefix_cow_forks >= 1
+    assert st.prefill_tokens_saved >= 0.30
+    assert reference_decode(eng.fns, prompts[0], 10) == on[0]
+    assert reference_decode(eng.fns, prompts[-1], 10) == on[-1]
+
+
+def test_serving_overlap_mode_identical(small_model):
+    cfg, params = small_model
+    prompts = _shared_prompts(8, seed=3)
+    off, _ = _serve(cfg, params, prompts, prefix_cache=False)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True, overlap=True)
+    assert on == off and eng.stats.prefix_hits > 0
+
+
+def test_serving_pallas_decode_identical(small_model):
+    cfg, params = small_model
+    prompts = _shared_prompts(5, seed=4)
+    off, _ = _serve(cfg, params, prompts, prefix_cache=False,
+                    decode_backend="pallas")
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True,
+                     decode_backend="pallas")
+    assert on == off and eng.stats.prefix_hits > 0
+
+
+def test_compile_once_suffix_buckets(small_model):
+    cfg, params = small_model
+    prompts = _shared_prompts(10, seed=5)
+    _, eng = _serve(cfg, params, prompts, prefix_cache=True)
+    fns = eng.fns
+    assert fns.prefill_suffix._cache_size() <= len(fns.suffix_buckets)
+    assert fns.prefill_suffix._cache_size() >= 1
+    assert fns.copy_block._cache_size() == 1
+    # cold admissions ride the batched prefill / prefill_into_slot paths;
+    # neither retraces (compile-once invariant I2)
+    assert fns.prefill._cache_size() <= 1
+    assert fns.prefill_into_slot._cache_size() <= 1
+
+
+def test_finish_admit_interleave_shared_prefix_scrub(small_model):
+    """Satellite regression: request B shares A's promoted prefix blocks;
+    C finishes and is scrubbed while B still decodes; B's own retire must
+    not scrub the cache-held blocks.  scrub_freed=True makes any violation
+    destroy resident KV and break token equality."""
+    cfg, params = small_model
+    rng = np.random.RandomState(6)
+    shared = rng.randint(1, 128, size=40).tolist()
+    prompts = ([shared + rng.randint(1, 128, size=12).tolist()
+                for _ in range(5)]
+               + [rng.randint(1, 128, size=20).tolist()]   # unrelated C
+               + [shared + rng.randint(1, 128, size=12).tolist()
+                  for _ in range(3)])
+    off, _ = _serve(cfg, params, prompts, prefix_cache=False, scrub=True)
+    for overlap in (False, True):
+        on, eng = _serve(cfg, params, prompts, prefix_cache=True,
+                         scrub=True, overlap=overlap)
+        assert on == off, f"overlap={overlap}"
+        a = eng.scheduler.allocator
+        assert not a._tables                       # all requests retired
+        assert all(a.refcount(b) == 1 for b in a._cache_held)
+        assert a.n_cache_only == eng.scheduler.prefix.n_blocks
+
+
+def test_serving_namespace_isolation(small_model):
+    """Same prompt under two namespaces must not share KV (no cross-tenant
+    hits), yet outputs stay identical to the uncached path."""
+    cfg, params = small_model
+    prompts = _shared_prompts(6, seed=7)
+    ns = ["a" if i % 2 == 0 else "b" for i in range(len(prompts))]
+    off, _ = _serve(cfg, params, prompts, prefix_cache=False, namespaces=ns)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True, namespaces=ns)
+    assert on == off
+    # per-namespace trees: both namespaces hold their own copy
+    roots = eng.scheduler.prefix._roots
+    assert set(roots) >= {"a", "b"}
+
+
+def test_backpressure_eviction_drains_queue(small_model):
+    """Pool sized so admissions must evict cached blocks: the queue still
+    drains (no deadlock) and outputs stay identical."""
+    cfg, params = small_model
+    prompts = _shared_prompts(8, seed=8)
+    # worst-case demand per request: ceil((52 + 10 + 5) / 16) = 5 blocks;
+    # 2 lanes -> 10 + NULL. One spare block for the cache to fight over.
+    off, _ = _serve(cfg, params, prompts, prefix_cache=False, n_blocks=11)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True, n_blocks=11)
+    assert on == off
+    assert eng.stats.prefix_evicted_blocks > 0
