@@ -1,4 +1,5 @@
 """Lookahead core: trie-based lossless multi-branch speculative decoding."""
+from .autotune import AutoTuneConfig, AutoTuner, NamespaceController
 from .draft import (BUILDERS, DraftTree, build_hierarchical, build_parallel,
                     build_single, repad)
 from .draft_sources import (AdaptiveBudget, DraftPolicy, DraftSource,
@@ -27,4 +28,5 @@ __all__ = [
     "PromptCopySource", "TrieSource", "available_sources",
     "build_draft_from_policy", "make_source", "merge_branches",
     "register_source",
+    "AutoTuneConfig", "AutoTuner", "NamespaceController",
 ]

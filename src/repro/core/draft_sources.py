@@ -513,7 +513,9 @@ def build_draft_from_policy(sources: Sequence[DraftSource],
                             policy: DraftPolicy, cfg: LookaheadConfig,
                             rid: int, context: Sequence[int], pad_id: int,
                             width: int,
-                            budget: Optional[int] = None) -> DraftTree:
+                            budget: Optional[int] = None,
+                            quotas: Optional[Sequence[int]] = None
+                            ) -> DraftTree:
     """Retrieve from every policy source, merge, and build one ``DraftTree``
     padded to exactly ``width`` slots.
 
@@ -521,6 +523,10 @@ def build_draft_from_policy(sources: Sequence[DraftSource],
     builder — for the default policy (TrieSource alone, full budget) the
     produced tree is identical, slot for slot, to the old hardwired
     ``build_draft_tree``.
+
+    ``quotas`` overrides the policy's per-source caps (parallel to
+    ``sources``) — the autotune controller passes the gated subset of a
+    policy's sources with its own quota decisions (core/autotune.py).
     """
     root = int(context[-1])
     eff = cfg.decoding_length if budget is None else int(budget)
@@ -532,7 +538,8 @@ def build_draft_from_policy(sources: Sequence[DraftSource],
         src = sources[0]
         # a single-source quota still caps the tree (same semantics as the
         # merge path, where the quota bounds the source's new-token spend)
-        eff = min(eff, policy.quota(0, eff))
+        eff = min(eff, policy.quota(0, eff) if quotas is None
+                  else min(int(quotas[0]), eff))
         branches, scores = src.retrieve(rid, context, budget=eff,
                                         namespace=ns)
         tags: List[str] = [src.name] * len(branches)
@@ -540,8 +547,10 @@ def build_draft_from_policy(sources: Sequence[DraftSource],
         per = [(s.name,) + tuple(s.retrieve(rid, context, budget=eff,
                                             namespace=ns))
                for s in sources]
-        quotas = [policy.quota(i, eff) for i in range(len(sources))]
-        branches, scores, tags = merge_branches(per, eff, quotas)
+        caps = ([policy.quota(i, eff) for i in range(len(sources))]
+                if quotas is None
+                else [min(int(q), eff) for q in quotas])
+        branches, scores, tags = merge_branches(per, eff, caps)
     tree = BUILDERS[cfg.strategy](root, branches, scores, eff, pad_id,
                                   sources=tags)
     return repad(tree, width, pad_id)

@@ -212,13 +212,17 @@ class GenStats:
     # tagged.
     source_drafted: Dict[str, int] = field(default_factory=dict)
     source_accepted: Dict[str, int] = field(default_factory=dict)
-    # per-step latency breakdown (scheduler runs only): batch-level step
-    # time apportioned to this request over its decode steps.  host_syncs
-    # counts device->host pulls attributed to it (fused path: exactly one
-    # per decode step it participated in).
+    # per-step latency breakdown (scheduler runs only): each decode step's
+    # measured wall-clock split accrues onto EVERY request riding that step
+    # — exact per-step sums, not batch-level means, so co-resident requests
+    # of different lengths report their own step mix.  host_syncs counts
+    # device->host pulls attributed to it (fused path: exactly one per
+    # decode step it participated in).
     host_draft_ms: float = 0.0     # draft build + tree packing per step
     device_step_ms: float = 0.0    # dispatch -> packed result on host
     accept_commit_ms: float = 0.0  # accept bookkeeping + retire + tables
+    hidden_host_ms: float = 0.0    # deferred retirement drained behind the
+    #                                step's device flight window (overlap)
     host_syncs: int = 0
     # prompt tokens served from the prefix cache (prefill compute skipped)
     cached_prompt_tokens: int = 0

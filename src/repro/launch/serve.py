@@ -104,6 +104,21 @@ def main() -> None:
                          "namespace (per-scenario tries, isolated branch "
                          "frequencies; the synthetic stream tags requests "
                          "with 'tenant')")
+    ap.add_argument("--lane-shares", default=None,
+                    help="per-namespace lane shares as ns=frac,... (e.g. "
+                         "t0=0.5,t1=0.5): weighted-fair admission across "
+                         "tenants with a lane-occupancy cap of "
+                         "ceil(lanes*frac) each; unlisted namespaces are "
+                         "uncapped at the lowest listed weight")
+    ap.add_argument("--draft-budget-caps", default=None,
+                    help="per-namespace draft budget caps as ns=int,... — "
+                         "bounds speculative tokens per tree for that "
+                         "tenant's requests")
+    ap.add_argument("--autotune", action="store_true",
+                    help="per-namespace draft-source auto-tuning: drive a "
+                         "source's quota to zero on namespaces where it "
+                         "never verifies (EMA acceptance controller; "
+                         "outputs stay bit-identical)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.8)
@@ -145,6 +160,24 @@ def main() -> None:
                          "of this many tokens (prefix-heavy traffic for "
                          "--prefix-cache)")
     args = ap.parse_args()
+
+    def _ns_map(spec, cast):
+        if not spec:
+            return None
+        out = {}
+        for cell in spec.split(","):
+            ns, _, val = cell.partition("=")
+            if not _:
+                raise SystemExit(f"bad ns=value cell {cell!r}")
+            out[ns] = cast(val)
+        return out
+
+    lane_shares = _ns_map(args.lane_shares, float)
+    draft_caps = _ns_map(args.draft_budget_caps, int)
+    if (lane_shares or draft_caps) and not args.trie_namespace_key:
+        raise SystemExit("--lane-shares/--draft-budget-caps key on the "
+                         "request namespace; set --trie-namespace-key "
+                         "(e.g. tenant) so requests carry one")
     if args.prefix_cache and args.kv_layout != "paged":
         raise SystemExit("--prefix-cache requires --kv-layout paged")
     if args.kv_layout == "paged" and args.mode == "lockstep":
@@ -155,11 +188,11 @@ def main() -> None:
         adaptive=args.adaptive_draft).validate()
     if args.mode == "lockstep" and (
             draft_policy.sources != ("trie",) or draft_policy.adaptive
-            or args.trie_namespace_key):
+            or args.trie_namespace_key or args.autotune):
         raise SystemExit("--draft-sources/--adaptive-draft/"
-                         "--trie-namespace-key require --mode continuous "
-                         "(the lock-step loop is the hardwired-trie "
-                         "baseline)")
+                         "--trie-namespace-key/--autotune require --mode "
+                         "continuous (the lock-step loop is the "
+                         "hardwired-trie baseline)")
 
     mod = cfgreg.get_arch(args.arch)
     cfg = mod.smoke_config() if args.smoke else mod.full_config()
@@ -202,7 +235,10 @@ def main() -> None:
         draft_policy=draft_policy,
         overlap_drafts=args.overlap_drafts,
         prefix_cache=args.prefix_cache,
-        prefix_cache_blocks=args.prefix_cache_blocks or None)
+        prefix_cache_blocks=args.prefix_cache_blocks or None,
+        lane_shares=lane_shares,
+        draft_budget_caps=draft_caps,
+        autotune=args.autotune)
     engine = build_engine(ecfg, cfg, params)
 
     corpus = SyntheticCorpus(PROFILES["antrag"], cfg.vocab_size, seed=0)
@@ -335,6 +371,27 @@ def main() -> None:
                  f"({accepted.get(name, 0) / max(n, 1):.0%})"
                  for name, n in sorted(drafted.items())]
         print(f"draft sources (accepted/drafted): {'   '.join(cells)}")
+    # per-tenant SLO telemetry: latency percentiles, occupancy share and the
+    # controller's per-source verdicts for every namespace seen this run
+    ns_sum = st.namespace_summary()
+    if len(ns_sum) > 1 or lane_shares or args.autotune:
+        for ns, row in ns_sum.items():
+            print(f"tenant {ns or '<default>'!s:10s} "
+                  f"fin {row['finished']:3d}/{row['submitted']:3d} "
+                  f"({row['cancelled']} cancelled) "
+                  f"occ {row['occupancy']:.2f}  "
+                  f"p50 {row['p50_latency_s']*1e3:7.1f} ms  "
+                  f"p99 {row['p99_latency_s']*1e3:7.1f} ms  "
+                  f"ttft-p99 {row['p99_ttft_s']*1e3:7.1f} ms  "
+                  f"queue-p99 {row['p99_queue_s']*1e3:7.1f} ms")
+    if sched.autotuner is not None:
+        for ns, srcs in sorted(sched.autotuner.snapshot().items()):
+            cells = [f"{name} {'on' if s['enabled'] else 'OFF'} "
+                     f"ema {s['ema']:.2f} "
+                     f"({s['accepted']}/{s['drafted']}, "
+                     f"{s['probes']} probes)"
+                     for name, s in sorted(srcs.items())]
+            print(f"autotune [{ns or '<default>'}]: {'   '.join(cells)}")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import (Any, Callable, Iterator, List, Optional, Sequence,
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     Union)
 
 from repro.core.draft_sources import DraftPolicy
@@ -88,6 +88,20 @@ class EngineConfig:
     # adaptive budget) for requests whose params carry draft=None; purely
     # host-side, so any policy serves on the same compiled executables
     draft_policy: DraftPolicy = field(default_factory=DraftPolicy)
+    # ---- multi-tenant SLO controls (DESIGN.md §Multi-tenant SLOs).  All
+    # host-side admission/draft policy: outputs stay bit-identical (I1) and
+    # nothing retraces (I2).
+    # lane_shares: namespace -> fraction of the lane pool in (0, 1] it may
+    # hold at once (weighted-fair admission; unlisted namespaces weigh like
+    # the smallest listed share and are uncapped).  None/{} = global FIFO.
+    lane_shares: Optional[Dict[str, float]] = None
+    # draft_budget_caps: namespace -> max draft tokens per tree (bounds a
+    # hot tenant's host-side draft cost; the compiled width is untouched)
+    draft_budget_caps: Optional[Dict[str, int]] = None
+    # autotune: per-namespace EMA bandit over draft-source quotas — sources
+    # that never verify on a namespace get their quota driven to zero and
+    # their retrieve cost skipped (core/autotune.py)
+    autotune: bool = False
 
     @property
     def slots(self) -> int:
@@ -137,6 +151,14 @@ class EngineConfig:
             if b is not None and b not in names:
                 raise ValueError(f"unknown attention backend {b!r} "
                                  f"(registry: {', '.join(names)})")
+        for nsn, share in (self.lane_shares or {}).items():
+            if not 0.0 < float(share) <= 1.0:
+                raise ValueError(f"lane_shares[{nsn!r}]={share}: need a "
+                                 "pool fraction in (0, 1]")
+        for nsn, cap in (self.draft_budget_caps or {}).items():
+            if int(cap) < 0:
+                raise ValueError(f"draft_budget_caps[{nsn!r}]={cap}: "
+                                 "need >= 0")
         self.default_params.validate()
         self.draft_policy.validate()
         return self
@@ -278,7 +300,10 @@ class ServingEngine:
             draft_policy=config.draft_policy,
             overlap_drafts=config.overlap_drafts,
             prefix_cache=config.prefix_cache,
-            prefix_cache_blocks=config.prefix_cache_blocks)
+            prefix_cache_blocks=config.prefix_cache_blocks,
+            lane_shares=config.lane_shares,
+            draft_budget_caps=config.draft_budget_caps,
+            autotune=config.autotune)
 
     # ---- request surface
     def submit(self, request: Union[Request, Sequence[int]],

@@ -130,6 +130,10 @@ class BlockAllocator:
         """Current owner count of a physical block (0 == free)."""
         return self._ref.get(int(block), 0)
 
+    def owns(self, rid: int) -> bool:
+        """True while ``rid`` holds a block table (allocated, not freed)."""
+        return rid in self._tables
+
     def table(self, rid: int) -> List[int]:
         return list(self._tables[rid])
 

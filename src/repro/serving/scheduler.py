@@ -62,6 +62,7 @@ device ``StepFns`` and every invariant above are untouched.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Sequence
@@ -69,6 +70,7 @@ from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autotune import AutoTuner
 from repro.core.draft_sources import (AdaptiveBudget, DraftPolicy,
                                       DraftSource, TrieSource,
                                       build_draft_from_policy, make_source)
@@ -83,6 +85,50 @@ from repro.serving.prefix_cache import PrefixCache
 
 if TYPE_CHECKING:   # avoid a load-time cycle: api.py imports the scheduler
     from repro.serving.api import RequestHandle
+
+
+class NamespaceStats:
+    """Per-tenant slice of the serving-loop statistics (SLO reporting:
+    latency percentiles, lane occupancy, per-source acceptance)."""
+
+    def __init__(self):
+        self.submitted = 0
+        self.finished = 0          # includes cancelled
+        self.cancelled = 0
+        self.tokens = 0
+        self.lane_steps = 0        # decode steps x lanes this tenant held
+        self.latencies: List[float] = []
+        self.ttfts: List[float] = []
+        self.queue_waits: List[float] = []
+        self.source_drafted: Dict[str, int] = {}
+        self.source_accepted: Dict[str, int] = {}
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        if not xs:
+            return 0.0
+        ys = sorted(xs)
+        return ys[min(int(round(q * (len(ys) - 1))), len(ys) - 1)]
+
+    def p50_latency(self) -> float:
+        return self._pct(self.latencies, 0.50)
+
+    def p99_latency(self) -> float:
+        return self._pct(self.latencies, 0.99)
+
+    def source_acceptance(self) -> Dict[str, float]:
+        return {n: self.source_accepted.get(n, 0) / max(d, 1)
+                for n, d in self.source_drafted.items()}
+
+    def summary(self, decode_steps: int, lanes: int) -> Dict[str, float]:
+        return {"submitted": self.submitted, "finished": self.finished,
+                "cancelled": self.cancelled, "tokens": self.tokens,
+                "occupancy": self.lane_steps / max(decode_steps * lanes, 1),
+                "p50_latency_s": self.p50_latency(),
+                "p99_latency_s": self.p99_latency(),
+                "p50_ttft_s": self._pct(self.ttfts, 0.50),
+                "p99_ttft_s": self._pct(self.ttfts, 0.99),
+                "p99_queue_s": self._pct(self.queue_waits, 0.99)}
 
 
 class SchedulerStats:
@@ -112,6 +158,19 @@ class SchedulerStats:
         self.prefix_prompt_tokens = 0  # prompt tokens presented to lookup
         self.prefix_cow_forks = 0
         self.prefix_evicted_blocks = 0
+        # ---- per-tenant slices (keyed by trie namespace); created lazily
+        self.namespaces: Dict[str, NamespaceStats] = {}
+
+    def ns(self, namespace: str) -> NamespaceStats:
+        s = self.namespaces.get(namespace)
+        if s is None:
+            s = self.namespaces[namespace] = NamespaceStats()
+        return s
+
+    def namespace_summary(self) -> Dict[str, Dict[str, float]]:
+        """namespace -> SLO summary (percentiles, occupancy, counts)."""
+        return {name: st.summary(self.decode_steps, self.lanes)
+                for name, st in sorted(self.namespaces.items())}
 
     @property
     def occupancy(self) -> float:
@@ -160,7 +219,10 @@ class ContinuousScheduler:
                  overlap_drafts: bool = False,
                  record_breakdown: bool = False,
                  prefix_cache: bool = False,
-                 prefix_cache_blocks: Optional[int] = None):
+                 prefix_cache_blocks: Optional[int] = None,
+                 lane_shares: Optional[Dict[str, float]] = None,
+                 draft_budget_caps: Optional[Dict[str, int]] = None,
+                 autotune=False):
         if not fns.supports_slot_serving:
             raise ValueError("StepFns lack prefill_into_slot/init_cache; "
                              "continuous batching needs per-slot admission")
@@ -210,10 +272,32 @@ class ContinuousScheduler:
             raise ValueError(
                 f"prefill_len={self.prefill_len} + tree width={self.width} "
                 f"exceeds max_seq_len={fns.max_seq_len}")
+        # ---- multi-tenant control layer (DESIGN.md §Multi-tenant SLOs):
+        # per-namespace admission queues (each tenant's own queue stays FIFO
+        # — I1 losslessness is per-request, so only cross-tenant order may
+        # change), stride-scheduled when lane shares are configured, global
+        # FIFO by rid otherwise (bit-identical to the single-queue code).
+        self.lane_shares: Dict[str, float] = {
+            str(k): float(v) for k, v in (lane_shares or {}).items()}
+        for nsn, share in self.lane_shares.items():
+            if not 0.0 < share <= 1.0:
+                raise ValueError(f"lane share for namespace {nsn!r} is "
+                                 f"{share}; need a pool fraction in (0, 1]")
+        self.draft_budget_caps: Dict[str, int] = {
+            str(k): int(v) for k, v in (draft_budget_caps or {}).items()}
+        for nsn, cap in self.draft_budget_caps.items():
+            if cap < 0:
+                raise ValueError(f"draft budget cap for namespace {nsn!r} "
+                                 f"is {cap}; need >= 0")
+        self.autotuner: Optional[AutoTuner] = (
+            autotune if isinstance(autotune, AutoTuner)
+            else (AutoTuner() if autotune else None))
+        self.queues: Dict[str, Deque[RequestState]] = {}
+        self._q_pass: Dict[str, float] = {}   # stride pass per namespace
+        self._vtime = 0.0                     # virtual time = last served pass
         self.cache = None          # allocated by the first admission batch
         self.lens = np.zeros((self.lanes,), dtype=np.int32)
         self.states: List[Optional[RequestState]] = [None] * self.lanes
-        self.queue: Deque[RequestState] = deque()
         self.results: Dict[int, RequestResult] = {}
         self.handles: Dict[int, "RequestHandle"] = {}
         self._order: List[int] = []
@@ -256,6 +340,10 @@ class ContinuousScheduler:
         # transient per-admission hit info: rid -> (n_cached, cow_src,
         # cow_dst); written by _claim_blocks, consumed by the same _admit
         self._hits: Dict[int, tuple] = {}
+        # block ids evicted before the first prefill created the cache:
+        # scrubbing needs a cache to dispatch against, so the ids wait here
+        # and flush right after cache creation (satellite: silent scrub skip)
+        self._scrub_backlog: List[int] = []
 
     # ------------------------------------------------------------------ state
     @property
@@ -264,12 +352,83 @@ class ContinuousScheduler:
 
     @property
     def n_queued(self) -> int:
-        return len(self.queue)
+        return sum(len(q) for q in self.queues.values())
+
+    @property
+    def queue(self) -> List[RequestState]:
+        """Flat view of every queued request in global FIFO (rid) order
+        (read-only compat/introspection surface; admission order itself is
+        the per-namespace picker's business)."""
+        return sorted((rs for q in self.queues.values() for rs in q),
+                      key=lambda rs: rs.rid)
 
     @property
     def idle(self) -> bool:
-        return (self.n_active == 0 and not self.queue
+        return (self.n_active == 0 and self.n_queued == 0
                 and not self._pending and not self._retired)
+
+    # -------------------------------------------------- weighted-fair picking
+    def _ns_weight(self, nsn: str) -> float:
+        """Stride weight of a namespace: its configured share, or — for a
+        namespace the operator did not list — the smallest configured share
+        (unlisted tenants never outweigh provisioned ones)."""
+        w = self.lane_shares.get(nsn)
+        if w is not None:
+            return w
+        return min(self.lane_shares.values()) if self.lane_shares else 1.0
+
+    def _ns_lane_cap(self, nsn: str) -> int:
+        """Hard cap on lanes a namespace may hold at once: ceil(lanes x
+        share) for listed namespaces (floor 1 — a share never starves its
+        own tenant outright), the whole pool for unlisted ones."""
+        share = self.lane_shares.get(nsn)
+        if share is None:
+            return self.lanes
+        return max(1, int(math.ceil(self.lanes * share)))
+
+    def _lanes_in_use(self) -> Dict[str, int]:
+        """Lanes currently held per namespace (active + in-flight pending)."""
+        used: Dict[str, int] = {}
+        for rs in self.states:
+            if rs is not None:
+                used[rs.draft.namespace] = used.get(rs.draft.namespace,
+                                                    0) + 1
+        for rs in self._pending.values():
+            used[rs.draft.namespace] = used.get(rs.draft.namespace, 0) + 1
+        return used
+
+    def _pick_ns(self, in_use: Dict[str, int]) -> Optional[str]:
+        """The namespace whose queue head admits next.
+
+        No lane shares configured: global FIFO across tenants — the head
+        with the lowest rid (rids are submit-monotonic), bit-identical to
+        the old single-queue scheduler.  With shares: stride scheduling —
+        the eligible non-empty queue with the smallest pass value (ties
+        break by name, deterministically); namespaces at their lane cap are
+        skipped.  Within a namespace order is always FIFO.
+        """
+        best = None
+        for nsn, q in self.queues.items():
+            if not q:
+                continue
+            if self.lane_shares:
+                if in_use.get(nsn, 0) >= self._ns_lane_cap(nsn):
+                    continue
+                key = (self._q_pass.get(nsn, 0.0), nsn)
+            else:
+                key = (q[0].rid, nsn)
+            if best is None or key < best[0]:
+                best = (key, nsn)
+        return None if best is None else best[1]
+
+    def _take_queued(self, nsn: str) -> RequestState:
+        """Dequeue the namespace's head and charge its stride pass."""
+        rs = self.queues[nsn].popleft()
+        if self.lane_shares:
+            pas = max(self._q_pass.get(nsn, 0.0), self._vtime)
+            self._vtime = pas
+            self._q_pass[nsn] = pas + 1.0 / self._ns_weight(nsn)
+        return rs
 
     def _pull(self, x, *, decode: bool = False) -> np.ndarray:
         """THE device->host transfer point: every pull the loop makes goes
@@ -383,9 +542,17 @@ class ContinuousScheduler:
     def _scrub_blocks(self, freed: Sequence[int]) -> None:
         """Zero freed blocks on device (hygiene) — only ids whose refcount
         actually reached zero may ever be passed here.  Chunked to the
-        block-table width so one reset executable serves every call."""
-        if not (self.scrub_freed and freed and self.cache is not None
+        block-table width so one reset executable serves every call.
+
+        Before the first prefill there is no cache to dispatch against:
+        prefix-cache evictions made while claiming the initial cohort are
+        queued and flushed right after cache creation (they used to be
+        silently dropped under ``scrub_freed=True``)."""
+        if not (self.scrub_freed and freed
                 and self.fns.reset_blocks is not None):
+            return
+        if self.cache is None:
+            self._scrub_backlog.extend(int(b) for b in freed)
             return
         bpl = self.fns.blocks_per_lane
         for i in range(0, len(freed), bpl):
@@ -482,7 +649,16 @@ class ContinuousScheduler:
             rs.budget_ctl = AdaptiveBudget.from_policy(
                 policy, min(self.config.decoding_length, self.width - 1))
         rs.submit_t = time.perf_counter()
-        self.queue.append(rs)
+        nsn = policy.namespace
+        q = self.queues.get(nsn)
+        if q is None:
+            q = self.queues[nsn] = deque()
+        if not q:
+            # empty -> backlogged: a returning tenant resumes at the current
+            # virtual time, not at credit hoarded while it was idle
+            self._q_pass[nsn] = max(self._q_pass.get(nsn, 0.0), self._vtime)
+        q.append(rs)
+        self.stats.ns(nsn).submitted += 1
         self._order.append(rid)
         handle = RequestHandle(rs, self)
         self.handles[rid] = handle
@@ -505,21 +681,28 @@ class ContinuousScheduler:
 
     # -------------------------------------------------------------- admission
     def _admit(self) -> List[RequestResult]:
-        if self.cache is None and self.queue:
+        if self.cache is None and self.n_queued:
             return self._admit_initial_cohort()
         finished: List[RequestResult] = []
         fns = self.fns
+        in_use = self._lanes_in_use()
         for lane in range(self.lanes):
             if lane in self._pending:
                 continue
-            while self.states[lane] is None and self.queue:
-                rs = self.queue[0]
+            while self.states[lane] is None:
+                nsn = self._pick_ns(in_use)
+                if nsn is None:
+                    break
+                rs = self.queues[nsn][0]
                 if self.allocator is not None and \
                         not self._claim_blocks(rs, lane):
-                    # not enough reservable blocks: the whole queue waits
-                    # (FIFO — no overtaking, losslessness stays order-free)
+                    # not enough reservable blocks: ALL admission waits (the
+                    # blocked head keeps its turn — bounded wait; no
+                    # overtaking within or across tenants under backpressure,
+                    # so losslessness stays order-free and nothing starves)
                     return finished
-                self.queue.popleft()
+                self._take_queued(nsn)
+                in_use[nsn] = in_use.get(nsn, 0) + 1
                 rs.lane = lane
                 rs.admit_t = time.perf_counter()
                 self._set_lane_params(lane, rs.params)
@@ -562,6 +745,7 @@ class ContinuousScheduler:
                     break
                 if not self._settle(rs, int(self._pull(chosen)[0]), lane):
                     finished.append(self._finish(rs))
+                    in_use[nsn] -= 1   # finished at prefill: lane still free
         return finished
 
     def _admit_initial_cohort(self) -> List[RequestResult]:
@@ -571,12 +755,18 @@ class ContinuousScheduler:
         mid-flight admissions."""
         fns = self.fns
         cohort: List[RequestState] = []
-        while len(cohort) < self.lanes and self.queue:
-            rs = self.queue[0]
+        in_use: Dict[str, int] = {}
+        while len(cohort) < self.lanes:
+            nsn = self._pick_ns(in_use)
+            if nsn is None:
+                break
+            rs = self.queues[nsn][0]
             if self.allocator is not None and \
                     not self._claim_blocks(rs, len(cohort)):
                 break
-            cohort.append(self.queue.popleft())
+            self._take_queued(nsn)
+            in_use[nsn] = in_use.get(nsn, 0) + 1
+            cohort.append(rs)
         if not cohort:
             return []
         toks = np.full((self.lanes, self.prefill_len), fns.pad_id,
@@ -599,6 +789,16 @@ class ContinuousScheduler:
             self._tables_dirty = False
         else:
             self.cache, chosen = fns.prefill(toks, lens, **lane_kw)
+        if self._scrub_backlog:
+            # prefix-cache evictions made while claiming THIS cohort (no
+            # cache existed to scrub against): flush now that it does.  Ids
+            # the cohort itself re-allocated are skipped — their rows were
+            # just prefilled and a scrub would destroy live KV; only
+            # still-free blocks carry stale rows worth zeroing.
+            backlog = [b for b in self._scrub_backlog
+                       if self.allocator.refcount(b) == 0]
+            self._scrub_backlog.clear()
+            self._scrub_blocks(backlog)
         chosen = self._pull(chosen)
         finished: List[RequestResult] = []
         for lane, rs in enumerate(cohort):
@@ -625,12 +825,31 @@ class ContinuousScheduler:
     # ----------------------------------------------------------------- decode
     def _build_tree(self, rs: RequestState):
         # adaptive lanes draft at their controller's current budget; the
-        # remaining slots ride as padding (fixed W — no retrace)
+        # remaining slots ride as padding (fixed W — no retrace).  The
+        # namespace's draft-budget cap bounds it further (a hot tenant's
+        # wide trees are host cost co-residents pay for), and the autotune
+        # controller gates which sources retrieve at all — every knob here
+        # is host-side draft construction, so outputs never change (I1) and
+        # no compiled shape moves (I2).
         budget = (rs.budget_ctl.value if rs.budget_ctl is not None
                   else None)
+        cap = self.draft_budget_caps.get(rs.draft.namespace)
+        if cap is not None:
+            budget = min(self.config.decoding_length if budget is None
+                         else budget, cap)
+        sources = self._resolve_sources(rs.draft)
+        quotas = None
+        if self.autotuner is not None and len(sources) > 1:
+            eff = (self.config.decoding_length if budget is None else budget)
+            eff = max(min(eff, self.width - 1), 1)
+            base = [rs.draft.quota(i, eff) for i in range(len(sources))]
+            keep, quotas = self.autotuner.select(
+                rs.draft.namespace, [s.name for s in sources], base)
+            sources = [sources[i] for i in keep]
         return build_draft_from_policy(
-            self._resolve_sources(rs.draft), rs.draft, self.config, rs.rid,
-            rs.context, self.fns.pad_id, self.width, budget=budget)
+            sources, rs.draft, self.config, rs.rid,
+            rs.context, self.fns.pad_id, self.width, budget=budget,
+            quotas=quotas)
 
     def _decode(self) -> List[RequestResult]:
         fns, W = self.fns, self.width
@@ -652,18 +871,29 @@ class ContinuousScheduler:
         # behind the draft building above); a request finishing at prefill
         # leaves its lane free until the next scheduler iteration
         for lane in sorted(self._pending):
-            rs = self._pending[lane]
+            rs = self._pending.get(lane)
+            if rs is None:
+                # cancelled out of _pending by a co-resident's stream
+                # callback earlier in this very loop; its teardown is done
+                # and its block free already rides in _retired
+                continue
             chosen = self._pending_chosen[lane]
             if self._settle(rs, int(self._pull(chosen)[0]), lane):
                 trees[lane] = self._build_tree(rs)
-            else:
+            elif rs.rid not in self.results:
                 finished.append(self._finish(rs))
+            # else: cancel() finalized it mid-settle (a stream callback of
+            # its own first token); only its deferred block free remains
         self._pending.clear()
         self._pending_chosen.clear()
         active = [l for l in range(self.lanes) if self.states[l] is not None]
         if not active:
             self._drain_retired(finished)
             return finished
+        # requests riding THIS step (captured before retirement clears
+        # lanes): each accrues the step's measured wall-clock split — exact
+        # per-step sums, not global means (satellite: telemetry skew)
+        riders = [self.states[l] for l in active]
         for l in range(self.lanes):
             if trees[l] is None:
                 trees[l] = idle_tree(W, fns.pad_id)
@@ -742,6 +972,8 @@ class ContinuousScheduler:
         self.lens = new_lens
         self.stats.decode_steps += 1
         self.stats.active_lane_steps += len(active)
+        for rs in riders:
+            self.stats.ns(rs.draft.namespace).lane_steps += 1
 
         for l in active:
             rs = self.states[l]
@@ -765,17 +997,31 @@ class ContinuousScheduler:
         if self.allocator is not None:
             self._extend_tables(active)
         t3 = time.perf_counter()
-        self.stats.host_draft_ms += (t1 - t0) * 1e3
-        self.stats.device_step_ms += (t2 - t1 - drained) * 1e3
-        self.stats.accept_commit_ms += (t3 - t2) * 1e3
+        hd = (t1 - t0) * 1e3
+        dv = (t2 - t1 - drained) * 1e3
+        ac = (t3 - t2) * 1e3
+        hh = drained * 1e3
+        self.stats.host_draft_ms += hd
+        self.stats.device_step_ms += dv
+        self.stats.accept_commit_ms += ac
+        # per-request breakdown: every rider of this step accrues the step's
+        # actual split (a short request co-resident with long ones reports
+        # only the steps it rode — not a whole-run mean — and the hidden
+        # host work drained behind its flight window is no longer dropped)
+        for rs in riders:
+            rst = rs.stats
+            rst.host_draft_ms += hd
+            rst.device_step_ms += dv
+            rst.accept_commit_ms += ac
+            rst.hidden_host_ms += hh
         if self.record_breakdown:
             self.step_breakdown.append({
                 "step": self.stats.decode_steps,
                 "active": len(active),
-                "host_draft_ms": (t1 - t0) * 1e3,
-                "device_step_ms": (t2 - t1 - drained) * 1e3,
-                "accept_commit_ms": (t3 - t2) * 1e3,
-                "hidden_host_ms": drained * 1e3,
+                "host_draft_ms": hd,
+                "device_step_ms": dv,
+                "accept_commit_ms": ac,
+                "hidden_host_ms": hh,
                 "syncs": 1 if fused else 2})
         return finished
 
@@ -815,17 +1061,20 @@ class ContinuousScheduler:
         release — so co-resident requests are untouched (I1 is per-request).
         Returns False if the request already finished.
         """
-        for i, rs in enumerate(self.queue):      # still queued: nothing held
-            if rs.rid == rid:
-                del self.queue[i]
-                rs.cancel()
-                rs.finish_t = time.perf_counter()
-                res = rs.result()
-                self.results[rid] = res
-                h = self.handles.pop(rid, None)
-                if h is not None:
-                    h._finalize(res)
-                return True
+        for q in self.queues.values():           # still queued: nothing held
+            for i, rs in enumerate(q):
+                if rs.rid == rid:
+                    del q[i]
+                    rs.cancel()
+                    rs.finish_t = time.perf_counter()
+                    res = rs.result()
+                    self.results[rid] = res
+                    nst = self.stats.ns(rs.draft.namespace)
+                    nst.cancelled += 1
+                    h = self.handles.pop(rid, None)
+                    if h is not None:
+                        h._finalize(res)
+                    return True
         for lane in range(self.lanes):
             rs = self.states[lane]
             if rs is not None and rs.rid == rid:
@@ -835,14 +1084,30 @@ class ContinuousScheduler:
                 self.lens[lane] = 0
                 return True
         for lane, rs in list(self._pending.items()):
-            # overlap mode: admission prefill still in flight — drop the
-            # reservation; the in-flight write lands before any re-admission
-            # into the lane overwrites it (device-stream dispatch order)
+            # overlap mode: the admission prefill may still be IN FLIGHT on
+            # device.  Tear down the host-visible side now (the handle's
+            # cancel() must return a finalized result) but route the block
+            # free through _retired/_drain_retired: freeing here would let a
+            # same-iteration re-admission be handed these very block ids
+            # while the in-flight prefill still writes into them
+            # (use-after-free window — satellite bugfix).  The lane-keyed
+            # cleanup runs now, like _release_lane: the lane may be
+            # re-admitted before the deferred free drains.
             if rs.rid == rid:
                 del self._pending[lane]
                 del self._pending_chosen[lane]
                 rs.cancel()
-                self._finish(rs)
+                rs.finish_t = time.perf_counter()
+                rs.lane = -1
+                if self.allocator is not None:
+                    self.tables[lane, :] = 0
+                    self._tables_dirty = True
+                elif (self.scrub_freed and self.fns.reset_slot is not None
+                        and self.cache is not None):
+                    self.cache = self.fns.reset_slot(self.cache, lane)
+                self._retire_sources(rs)
+                self._finalize_result(rs)
+                self._retired.append(rs)
                 return True
         for i, rs in enumerate(self._retired):
             # already done, heavy retirement still deferred: finalize now so
@@ -896,8 +1161,13 @@ class ContinuousScheduler:
         return self._finish_retire(rs)
 
     def _finish_retire(self, rs: RequestState) -> RequestResult:
-        self._retire_sources(rs)
-        if self.allocator is not None:
+        # cancel() of a pending overlap admission already finalized the
+        # host-visible side (result, handle, telemetry) — only the deferred
+        # block free and scrub reach here, once, via _drain_retired
+        already = rs.rid in self.results
+        if not already:
+            self._retire_sources(rs)
+        if self.allocator is not None and self.allocator.owns(rs.rid):
             # Promote the prompt's blocks into the prefix cache BEFORE the
             # free: the tree takes its own reference on each adopted block,
             # so the free below just drops this request's reference and the
@@ -918,24 +1188,39 @@ class ContinuousScheduler:
             # deferred retirement).
             freed = self.allocator.free(rs.rid)
             self._scrub_blocks(freed)
-        self._stamp_breakdown(rs)
+        if already:
+            return self.results[rs.rid]
+        return self._finalize_result(rs)
+
+    def _finalize_result(self, rs: RequestState) -> RequestResult:
+        """Build + record the result, accrue the namespace's SLO slice,
+        feed the autotune controller, finalize the handle."""
         res = rs.result()
         self.results[rs.rid] = res
         self.stats.finished += 1
+        nst = self.stats.ns(rs.draft.namespace)
+        nst.finished += 1
+        if rs.cancelled:
+            nst.cancelled += 1
+        nst.tokens += len(rs.output)
+        nst.latencies.append(res.latency_s)
+        nst.ttfts.append(res.ttft_s)
+        nst.queue_waits.append(res.queue_s)
+        for k, v in rs.stats.source_drafted.items():
+            nst.source_drafted[k] = nst.source_drafted.get(k, 0) + v
+        for k, v in rs.stats.source_accepted.items():
+            nst.source_accepted[k] = nst.source_accepted.get(k, 0) + v
+        if self.autotuner is not None:
+            # retire-time observation: the request's per-source counters are
+            # complete, and the call is a pure function of token history —
+            # deterministic, so autotune on/off stays bit-identical (I1)
+            self.autotuner.observe(rs.draft.namespace,
+                                   rs.stats.source_drafted,
+                                   rs.stats.source_accepted)
         h = self.handles.pop(rs.rid, None)   # pop: a long-running server
         if h is not None:                    # must not accrete dead handles
             h._finalize(res)
         return res
 
-    def _stamp_breakdown(self, rs: RequestState) -> None:
-        """Apportion the scheduler's batch-level per-step latency means to
-        this request over the decode steps it rode in (its GenStats carry
-        the breakdown into RequestResult)."""
-        st, d = self.stats, max(self.stats.decode_steps, 1)
-        part = max(rs.stats.steps - 1, 0)    # minus the prefill step
-        rs.stats.host_draft_ms = st.host_draft_ms / d * part
-        rs.stats.device_step_ms = st.device_step_ms / d * part
-        rs.stats.accept_commit_ms = st.accept_commit_ms / d * part
 
-
-__all__ = ["ContinuousScheduler", "SchedulerStats"]
+__all__ = ["ContinuousScheduler", "NamespaceStats", "SchedulerStats"]

@@ -1,0 +1,281 @@
+"""Per-namespace draft-source auto-tuning (DESIGN.md §Multi-tenant SLOs).
+
+Unit level: the EMA controller's disable/probe/re-enable state machine and
+its gate decisions.  Integration level: a scheduler whose policy includes a
+source that never verifies — the controller must zero its quota (and skip
+its retrieve cost) on that namespace while outputs stay bit-identical to
+an autotune-off run AND reference_decode (I1: gating only shapes which
+draft tokens get built; verification is lossless).  Compile level: the
+controller's state feeds no traced shape, so it can never retrace (I2).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LookaheadConfig, reference_decode
+from repro.core.autotune import (AutoTuneConfig, AutoTuner,
+                                 NamespaceController)
+from repro.core.draft_sources import (DraftPolicy, DraftSource,
+                                      register_source)
+from repro.core.request import Request, SamplingParams
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.session import make_session_fns
+
+PREFILL = 48
+
+
+@pytest.fixture(scope="module")
+def fns():
+    cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                            d_ff=128, vocab_size=101, max_seq_len=320)
+    params = init_params(cfg, jax.random.key(0))
+    return make_session_fns(cfg, params, slots=17, prefill_len=PREFILL)
+
+
+def _prompts(n, lo=8, hi=40, vocab=100, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, vocab, size=rng.randint(lo, hi)))
+            for _ in range(n)]
+
+
+def _la(**kw):
+    base = dict(decoding_length=16, branch_length=6)
+    base.update(kw)
+    return LookaheadConfig(**base)
+
+
+class CountingJunk(DraftSource):
+    """Drafts a chain of one repeated token; counts retrieve calls so tests
+    can prove a disabled source stops paying its host-side cost."""
+    name = "junk"
+
+    def __init__(self, config, token=1, chain=4):
+        super().__init__(config)
+        self.token = token
+        self.chain = chain
+        self.retrieves = 0
+
+    def retrieve(self, rid, context, *, budget, namespace=""):
+        self.retrieves += 1
+        k = min(self.chain, budget)
+        return ([[self.token] * k], [1.0]) if k >= 1 else ([], [])
+
+
+# DraftPolicy.validate checks the global registry; the schedulers below get
+# their own counting instance through the ``sources`` dict regardless
+register_source("junk", CountingJunk)
+
+
+# ------------------------------------------------------------------ unit
+def test_config_validation():
+    AutoTuneConfig().validate()
+    with pytest.raises(ValueError):
+        AutoTuneConfig(min_trials=0).validate()
+    with pytest.raises(ValueError):
+        AutoTuneConfig(drop_rate=1.0).validate()
+    with pytest.raises(ValueError):
+        AutoTuneConfig(ema_alpha=0.0).validate()
+    with pytest.raises(ValueError):
+        AutoTuneConfig(probe_period=0).validate()
+    with pytest.raises(ValueError):
+        AutoTuneConfig(probe_quota=0).validate()
+
+
+def test_controller_disables_after_min_trials():
+    ctl = NamespaceController(AutoTuneConfig(min_trials=20, drop_rate=0.05))
+    # under min_trials: a dead source stays enabled (cold-start protection)
+    ctl.observe({"junk": 10}, {"junk": 0})
+    assert ctl.stat("junk").enabled
+    keep, kq = ctl.gate(["junk", "trie"], [4, 8])
+    assert keep == [0, 1] and kq == [4, 8]
+    # past min_trials with EMA < drop_rate: disabled, quota zeroed
+    ctl.observe({"junk": 15}, {"junk": 0})
+    st = ctl.stat("junk")
+    assert not st.enabled and st.disables == 1
+    keep, kq = ctl.gate(["junk", "trie"], [4, 8])
+    assert keep == [1] and kq == [8]
+
+
+def test_controller_keeps_productive_source():
+    ctl = NamespaceController(AutoTuneConfig(min_trials=8, drop_rate=0.05))
+    for _ in range(10):
+        ctl.observe({"trie": 10}, {"trie": 6})
+    st = ctl.stat("trie")
+    assert st.enabled and st.ema == pytest.approx(0.6)
+    assert st.rate == pytest.approx(0.6)
+
+
+def test_probe_and_reenable():
+    cfg = AutoTuneConfig(min_trials=4, drop_rate=0.05, probe_period=3,
+                         probe_quota=2, ema_alpha=1.0)
+    ctl = NamespaceController(cfg)
+    ctl.observe({"junk": 8}, {"junk": 0})
+    assert not ctl.stat("junk").enabled
+    # two decisions: skipped; the third grants a probe at probe_quota
+    for _ in range(2):
+        assert ctl.gate(["junk", "trie"], [6, 6])[0] == [1]
+    keep, kq = ctl.gate(["junk", "trie"], [6, 6])
+    assert keep == [0, 1] and kq == [2, 6]
+    assert ctl.stat("junk").probes == 1
+    # the probe pays off (workload drift): re-enabled at full quota
+    ctl.observe({"junk": 2}, {"junk": 2})
+    assert ctl.stat("junk").enabled
+    assert ctl.gate(["junk"], [6]) == ([0], [6])
+
+
+def test_gate_fallback_never_strips_all_speculation():
+    cfg = AutoTuneConfig(min_trials=1, drop_rate=0.05, probe_period=100)
+    ctl = NamespaceController(cfg)
+    ctl.observe({"a": 4, "b": 4}, {})
+    assert ctl.gate(["a", "b"], [3, 5]) == ([0], [3])
+
+
+def test_autotuner_namespaces_are_isolated():
+    tun = AutoTuner(AutoTuneConfig(min_trials=4))
+    tun.observe("cold", {"junk": 8}, {"junk": 0})
+    tun.observe("warm", {"junk": 8}, {"junk": 8})
+    assert not tun.controller("cold").stat("junk").enabled
+    assert tun.controller("warm").stat("junk").enabled
+    snap = tun.snapshot()
+    assert snap["cold"]["junk"]["enabled"] is False
+    assert snap["warm"]["junk"]["rate"] == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------- integration
+def _run_workload(fns, prompts, budgets, *, junk=None, autotune=False,
+                  namespace="x"):
+    policy = DraftPolicy(sources=("trie", "junk"),
+                         namespace=namespace).validate()
+    la = _la()
+    sources = {"junk": junk if junk is not None else CountingJunk(la)}
+    sched = ContinuousScheduler(fns, la, lanes=2, prefill_len=PREFILL,
+                                sources=sources, autotune=autotune)
+    handles = [sched.submit_request(Request(
+        prompt=list(p),
+        params=SamplingParams(max_new_tokens=m, draft=policy)))
+        for p, m in zip(prompts, budgets)]
+    sched.run()
+    return [h.result().tokens for h in handles], sched
+
+
+def test_scheduler_zeroes_dead_source_and_stays_lossless(fns):
+    """The tentpole end-to-end: a junk source that never verifies is
+    disabled on its namespace, its retrieve cost stops accruing, and every
+    output is bit-identical with the controller on, off, and to
+    reference_decode."""
+    prompts = _prompts(6, seed=71)
+    budgets = [24, 6, 24, 12, 24, 8]
+    refs = [reference_decode(fns, p, m) for p, m in zip(prompts, budgets)]
+
+    off_out, _ = _run_workload(fns, prompts, budgets, autotune=False)
+    tuner = AutoTuner(AutoTuneConfig(min_trials=8, drop_rate=0.05,
+                                     probe_period=10_000))
+    junk = CountingJunk(_la())
+    on_out, sched = _run_workload(fns, prompts, budgets, junk=junk,
+                                  autotune=tuner)
+    assert on_out == off_out == refs        # I1: gating never moves a token
+
+    snap = sched.autotuner.snapshot()["x"]["junk"]
+    assert snap["enabled"] is False and snap["disables"] >= 1
+    assert snap["ema"] < 0.05
+
+    # disabled means SKIPPED: more traffic on the same scheduler adds no
+    # junk retrieve calls (probe_period is out of reach)
+    before = junk.retrieves
+    more = _prompts(3, seed=72)
+    h2 = [sched.submit_request(Request(
+        prompt=list(p),
+        params=SamplingParams(
+            max_new_tokens=10,
+            draft=DraftPolicy(sources=("trie", "junk"), namespace="x"))))
+        for p in more]
+    sched.run()
+    assert junk.retrieves == before
+    for h, p in zip(h2, more):
+        assert h.result().tokens == reference_decode(fns, p, 10)
+
+
+def test_autotune_is_per_namespace(fns):
+    """One scheduler, two tenants sharing the junk source: it is disabled
+    only on the namespace where it never verifies — the controller state is
+    namespace-scoped, not global."""
+    tuner = AutoTuner(AutoTuneConfig(min_trials=8, probe_period=10_000))
+    junk = CountingJunk(_la())
+    sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL,
+                                sources={"junk": junk}, autotune=tuner)
+    prompts = _prompts(6, seed=73)
+    handles = []
+    for i, p in enumerate(prompts):
+        ns = "dead" if i % 2 else "solo"
+        srcs = ("trie", "junk") if ns == "dead" else ("trie",)
+        handles.append(sched.submit_request(Request(
+            prompt=list(p),
+            params=SamplingParams(max_new_tokens=16, draft=DraftPolicy(
+                sources=srcs, namespace=ns)))))
+    sched.run()
+    for h, p in zip(handles, prompts):
+        assert h.result().tokens == reference_decode(fns, p, 16)
+    snap = sched.autotuner.snapshot()
+    assert snap["dead"]["junk"]["enabled"] is False
+    assert "junk" not in snap.get("solo", {})   # never drafted there
+
+
+def test_compile_once_with_controller_and_shares():
+    """I2: lane shares, budget caps and the autotuner gate live entirely on
+    the host — schedulers running with them retrace nothing (one executable
+    per step fn, exactly like the plain path)."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=53, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(5))
+    fresh = make_session_fns(cfg, params, slots=9, prefill_len=PREFILL)
+    la = _la(decoding_length=8, branch_length=4)
+    tuner = AutoTuner(AutoTuneConfig(min_trials=4, probe_period=3))
+    for seed, n in [(80, 5), (81, 3)]:
+        sched = ContinuousScheduler(
+            fresh, la, lanes=2, prefill_len=PREFILL,
+            sources={"junk": CountingJunk(la)},
+            lane_shares={"a": 0.5, "b": 0.5},
+            draft_budget_caps={"a": 4},
+            autotune=tuner)
+        for i, p in enumerate(_prompts(n, lo=4, hi=40, vocab=52, seed=seed)):
+            ns = "a" if i % 2 else "b"
+            sched.submit_request(Request(prompt=p, params=SamplingParams(
+                max_new_tokens=12,
+                draft=DraftPolicy(sources=("trie", "junk"), namespace=ns))))
+        sched.run()
+    assert fresh.prefill._cache_size() == 1
+    assert fresh.prefill_into_slot._cache_size() == 1
+    assert fresh.fused_step._cache_size() == 1
+    assert fresh.tree_step._cache_size() == 0
+    assert fresh.commit._cache_size() == 0
+
+
+def test_lane_shares_cap_tenant_occupancy(fns):
+    """Weighted-fair admission: with 50/50 shares on two lanes a flooding
+    tenant holds at most ceil(2*0.5)=1 lane, so the other tenant's first
+    request is admitted immediately instead of behind the flood (FIFO
+    within each tenant is untouched)."""
+    prompts = _prompts(8, seed=75)
+    sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL,
+                                lane_shares={"hog": 0.5, "svc": 0.5})
+    for p in prompts[:6]:
+        sched.submit_request(Request(prompt=list(p), params=SamplingParams(
+            max_new_tokens=24,
+            draft=DraftPolicy(namespace="hog"))))
+    for p in prompts[6:]:
+        sched.submit_request(Request(prompt=list(p), params=SamplingParams(
+            max_new_tokens=4,
+            draft=DraftPolicy(namespace="svc"))))
+    # the very first admission cohort must already hold one lane per tenant
+    sched._admit()
+    by_ns = [rs.draft.namespace for rs in sched.states if rs is not None]
+    assert sorted(by_ns) == ["hog", "svc"]
+    res = sched.run()
+    for r in res:     # rids are submit-ordered: rid == prompt index
+        assert r.tokens == reference_decode(fns, prompts[r.rid],
+                                            24 if r.rid < 6 else 4)
+    ns_sum = sched.stats.namespace_summary()
+    assert ns_sum["hog"]["finished"] == 6
+    assert ns_sum["svc"]["finished"] == 2
+    assert ns_sum["hog"]["p99_latency_s"] >= ns_sum["svc"]["p99_latency_s"]

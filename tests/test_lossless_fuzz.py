@@ -259,3 +259,102 @@ def test_fuzz_prefix_cache_lossless(seed, bs_idx, overlap):
                     (cell, seed, cached, i)
             outs[cached] = got
         assert outs[True] == outs[False], (cell, seed)
+
+
+# ------------------------------------------- cancel-under-overlap (ISSUE 8)
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(0, 1))
+def test_fuzz_cancel_under_overlap_lossless(seed, n_req, bs_idx):
+    """Random cancellation traffic against overlap-mode schedulers with
+    scrub_freed on (any teardown mistake destroys live KV): random victims
+    cancelled at random step counts; every SURVIVOR must stay bit-identical
+    to reference_decode on both layouts, every victim must come back
+    flagged, and no deferred state may leak past idle."""
+    rng = np.random.RandomState(seed % 2**31)
+    block_size = BLOCK_SIZES[bs_idx]
+    prompts = [rng.randint(1, VOCAB - 1,
+                           size=rng.randint(1, PREFILL - 4)).tolist()
+               for _ in range(n_req)]
+    budgets = [int(rng.randint(2, 18)) for _ in range(n_req)]
+    lanes = int(rng.randint(1, 3))
+    victims = {int(i): int(rng.randint(0, 6))       # rid -> cancel at step
+               for i in rng.choice(n_req, size=max(1, n_req // 2),
+                                   replace=False)}
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
+    for cell in (("dense", "dense", 0), ("paged", "pallas", block_size)):
+        fns = _get_fns(*cell)
+        sched = ContinuousScheduler(fns, la, lanes=lanes,
+                                    prefill_len=PREFILL,
+                                    overlap_drafts=True, scrub_freed=True)
+        rid_to_idx = {sched.submit(p, m): i
+                      for i, (p, m) in enumerate(zip(prompts, budgets))}
+        step = 0
+        while not sched.idle:
+            for rid, at in victims.items():
+                if step == at and rid not in sched.results:
+                    sched.cancel(rid)
+            sched.step()
+            step += 1
+        assert not sched._retired and not sched._pending
+        if sched.allocator is not None:
+            assert not sched.allocator._tables
+        assert len(sched.results) == n_req
+        for rid, res in sched.results.items():
+            i = rid_to_idx[rid]
+            if res.cancelled:
+                assert rid in victims and res.finish_reason == "cancelled"
+                # a cancelled stream is a clean PREFIX of the reference
+                ref = _ref(cell, prompts[i], budgets[i])
+                assert res.tokens == ref[:len(res.tokens)], (cell, seed, i)
+            else:
+                assert res.tokens == _ref(cell, prompts[i], budgets[i]), \
+                    (cell, seed, i)
+
+
+# --------------------------------------- multi-tenant autotune (ISSUE 8)
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 1), st.integers(0, 1))
+def test_fuzz_mixed_namespace_autotune_lossless(seed, shares_on, bs_idx):
+    """Mixed-namespace arrival streams with the per-namespace draft
+    controller on vs off (and optionally weighted-fair lane shares): the
+    controller only gates which draft tokens get BUILT, so every request
+    must be bit-identical across both runs and to reference_decode."""
+    from repro.core.autotune import AutoTuneConfig, AutoTuner
+    from repro.core.request import Request, SamplingParams
+
+    rng = np.random.RandomState(seed % 2**31)
+    block_size = BLOCK_SIZES[bs_idx]
+    n_req = int(rng.randint(2, 7))
+    prompts = [rng.randint(1, VOCAB - 1,
+                           size=rng.randint(1, PREFILL - 4)).tolist()
+               for _ in range(n_req)]
+    budgets = [int(rng.randint(1, 16)) for _ in range(n_req)]
+    combos = (("trie",), ("trie", "ngram"), ("trie", "prompt_copy", "ngram"))
+    policies = [DraftPolicy(sources=combos[rng.randint(len(combos))],
+                            namespace=f"ns{rng.randint(2)}")
+                for _ in range(n_req)]
+    lanes = int(rng.randint(1, 3))
+    shares = ({"ns0": 0.5, "ns1": 0.5} if shares_on else None)
+    la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
+    for cell in (("dense", "dense", 0), ("paged", "dense", block_size)):
+        fns = _get_fns(*cell)
+        outs = {}
+        for tune in (False, True):
+            autotune = (AutoTuner(AutoTuneConfig(min_trials=2, drop_rate=0.3,
+                                                 probe_period=2))
+                        if tune else False)
+            sched = ContinuousScheduler(fns, la, lanes=lanes,
+                                        prefill_len=PREFILL,
+                                        lane_shares=shares,
+                                        autotune=autotune)
+            handles = [sched.submit_request(Request(
+                prompt=list(p),
+                params=SamplingParams(max_new_tokens=m, draft=pol)))
+                for p, m, pol in zip(prompts, budgets, policies)]
+            sched.run()
+            got = [h.result().tokens for h in handles]
+            for i, t in enumerate(got):
+                assert t == _ref(cell, prompts[i], budgets[i]), \
+                    (cell, seed, tune, i)
+            outs[tune] = got
+        assert outs[True] == outs[False], (cell, seed)

@@ -259,3 +259,126 @@ def test_prefill_into_slot_matches_batched_prefill(fns):
         np.testing.assert_allclose(
             np.asarray(cache["v"])[:, lane, :n],
             cache_ref["v"][:, lane, :n], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_cancel_of_pending_overlap_admission_defers_block_free(layout):
+    """Satellite regression (use-after-free): cancelling a request whose
+    overlap-mode admission prefill is still IN FLIGHT must finalize the
+    host-visible side immediately but route the KV block free through the
+    deferred-retirement queue — freeing at cancel time would let a
+    same-iteration admission be handed block ids the in-flight prefill is
+    still writing into.  Driven the only way it can happen in production:
+    a co-resident request's first-token stream callback cancels a pending
+    neighbor mid-settle."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=53, max_seq_len=160)
+    params = init_params(cfg, jax.random.key(9))
+    kw = (dict(kv_layout="paged", block_size=16, n_blocks=24)
+          if layout == "paged" else {})
+    fns = make_session_fns(cfg, params, slots=9, prefill_len=32, **kw)
+    la = _la(decoding_length=8, branch_length=4)
+    prompts = _prompts(4, lo=6, hi=20, vocab=52, seed=61)
+    budgets = [30, 8, 8, 10]
+    refs = [reference_decode(fns, p, m) for p, m in zip(prompts, budgets)]
+
+    from repro.core.request import Request, SamplingParams
+    sched = ContinuousScheduler(fns, la, lanes=3, prefill_len=32,
+                                overlap_drafts=True, scrub_freed=True)
+
+    def _submit(i):
+        return sched.submit_request(Request(
+            prompt=list(prompts[i]),
+            params=SamplingParams(max_new_tokens=budgets[i])))
+
+    ha = _submit(0)
+    sched.step()                 # initial cohort: A active on lane 0
+    assert sched.n_active == 1
+
+    hb, hc = _submit(1), _submit(2)
+    seen = {}
+
+    def on_b_token(delta):
+        if seen:
+            return
+        # fires inside _decode's pending-settle loop: C is still a pending
+        # admission whose prefill dispatch is in flight on device
+        assert any(rs.rid == hc.rid for rs in sched._pending.values())
+        res = hc.cancel()
+        seen["result"] = res
+        seen["retired"] = any(rs.rid == hc.rid for rs in sched._retired)
+        if sched.allocator is not None:
+            # the bug under test: blocks must STILL be owned here — the
+            # deferred free runs behind the next device dispatch
+            seen["owned_at_cancel"] = sched.allocator.owns(hc.rid)
+
+    hb.on_token(on_b_token)
+    sched.step()                 # B+C go pending; B's settle cancels C
+    assert seen, "B's first-token callback never fired"
+    assert seen["result"].cancelled
+    assert seen["result"].finish_reason == "cancelled"
+    assert seen["retired"]
+    if layout == "paged":
+        assert seen["owned_at_cancel"]
+        # the deferred free drained inside that same step's flight window
+        assert not sched.allocator.owns(hc.rid)
+    assert hc.done and hc.cancel() is seen["result"]   # idempotent
+    assert not any(rs.rid == hc.rid for rs in sched._pending.values())
+
+    # the freed lane is reusable: D admits into it and stays lossless
+    hd = _submit(3)
+    sched.run()
+    assert ha.result().tokens == refs[0]
+    assert hb.result().tokens == refs[1]
+    assert hd.result().tokens == refs[3]
+    assert not sched._retired and not sched._pending
+    if layout == "paged":
+        assert not sched.allocator._tables      # every rid fully released
+    ns = sched.stats.ns("")
+    assert ns.cancelled == 1 and ns.finished == 4
+
+
+def test_breakdown_accrues_per_rider_steps(fns):
+    """Satellite regression (telemetry skew): a request's per-phase ms are
+    the SUM of the measured splits of exactly the decode steps it rode —
+    not a whole-run mean apportioned to everyone.  A short request
+    co-resident with a long one must report only its own steps' time, and
+    the overlap mode's hidden host ms must show up per request too."""
+    from repro.core.request import Request, SamplingParams
+    from repro.core.draft_sources import DraftPolicy
+    prompts = _prompts(2, seed=62)
+    sched = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL,
+                                record_breakdown=True)
+    hs = sched.submit_request(Request(prompt=prompts[0], params=SamplingParams(
+        max_new_tokens=4, draft=DraftPolicy(namespace="a"))))
+    hl = sched.submit_request(Request(prompt=prompts[1], params=SamplingParams(
+        max_new_tokens=28, draft=DraftPolicy(namespace="b"))))
+    sched.run()
+    short, long_ = hs.result(), hl.result()
+    k = short.stats.steps - 1          # decode steps (start() counts one)
+    n = long_.stats.steps - 1
+    assert 0 < k < n == len(sched.step_breakdown)
+    for field in ("host_draft_ms", "device_step_ms", "accept_commit_ms"):
+        assert getattr(short.stats, field) == pytest.approx(
+            sum(e[field] for e in sched.step_breakdown[:k]), rel=1e-9), field
+        assert getattr(long_.stats, field) == pytest.approx(
+            sum(e[field] for e in sched.step_breakdown), rel=1e-9), field
+    # the long request rode more wall time than the short one
+    assert long_.stats.device_step_ms > short.stats.device_step_ms
+    # per-namespace lane-step accounting matches the ride counts
+    assert sched.stats.ns("a").lane_steps == k
+    assert sched.stats.ns("b").lane_steps == n
+
+    # overlap mode: hidden host ms (bookkeeping drained inside the flight
+    # window) accrues on the riders of the draining steps — it was dropped
+    # entirely by the old global-mean stamping
+    sched2 = ContinuousScheduler(fns, _la(), lanes=2, prefill_len=PREFILL,
+                                 overlap_drafts=True, record_breakdown=True)
+    h2s = sched2.submit_request(Request(
+        prompt=prompts[0], params=SamplingParams(max_new_tokens=4)))
+    h2l = sched2.submit_request(Request(
+        prompt=prompts[1], params=SamplingParams(max_new_tokens=28)))
+    sched2.run()
+    assert h2l.result().stats.hidden_host_ms > 0.0
+    assert h2l.result().stats.hidden_host_ms == pytest.approx(
+        sum(e["hidden_host_ms"] for e in sched2.step_breakdown), rel=1e-9)
