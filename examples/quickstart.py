@@ -123,6 +123,20 @@ def main() -> None:
           f"{st.prefill_tokens_saved:.0%} of prefill tokens skipped, "
           "all outputs still bit-identical")
 
+    # runtime sanitizer: EngineConfig(sanitize=True) (or --sanitize on the
+    # serve driver) arms a shadow block ledger, a per-request lifecycle
+    # state machine and a retrace monitor; any double free, use-after-free,
+    # leaked block or unexpected recompile raises at the faulting call.
+    # Default-off costs nothing; on, outputs are still bit-identical
+    # (DESIGN.md §Invariants & analysis).
+    engine_san = build_engine(
+        dataclasses.replace(ecfg, kv_layout="paged", block_size=16,
+                            prefix_cache=True, sanitize=True), cfg, params)
+    out_san = engine_san.submit(prompt, max_new_tokens=64).result()
+    assert out_san.tokens == ref, "sanitizer changed an output!"
+    print("sanitizer ✓ — ledger/lifecycle/retrace audits clean, "
+          "outputs unchanged")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,28 @@
+"""Invariant analysis for the serving engine (DESIGN.md §Invariants &
+analysis).
+
+Two halves, one purpose: the engine's losslessness guarantee rests on a
+stack of hand-enforced invariants (one device sync per decode step through
+``_pull``, compile-once fixed shapes, refcounted block ownership with
+scrub-before-realloc, deferred frees under draft/device overlap).  Reviewer
+vigilance does not scale with the scheduler; mechanical checking does.
+
+* **Static pass** — ``repro.analysis.lint`` walks the AST of ``src/`` with
+  repo-specific rules R1-R5 (``repro.analysis.rules``).  Run it as
+
+      python -m repro.analysis.lint src/
+
+  Findings suppress per line with ``# repro-lint: disable=Rn``.
+
+* **Runtime sanitizer** — ``repro.analysis.sanitizer`` is the opt-in
+  (``EngineConfig.sanitize=True`` / ``serve.py --sanitize``) shadow layer:
+  a block-ownership ledger mirroring the ``BlockAllocator``, a per-request
+  lifecycle state machine on the scheduler, and a retrace monitor asserting
+  observed jit compile counts against a declared manifest.
+
+This module deliberately imports nothing heavyweight: the linter runs on a
+bare stdlib interpreter (CI's lint job), and the sanitizer needs only
+numpy.  Import the submodules directly.
+"""
+
+__all__ = ["lint", "rules", "sanitizer"]

@@ -1,0 +1,109 @@
+"""Repo-specific lint rules over the serving engine's invariants.
+
+Each rule is a class with a ``rule_id`` (``R1``..``R5``), a one-line
+``title``, and ``check(tree, path) -> List[Finding]``.  Rules are pure AST
+walks — no imports of the linted code, no execution — so the linter runs on
+a bare stdlib interpreter.
+
+    R1  device-pull discipline: inside classes that define a ``_pull``
+        choke point, every device->host transfer must go through it
+    R2  jit call sites declare donate_argnums/static_argnums explicitly
+        and never close over mutable object state
+    R3  refcount API pairing: share/cache_ref acquires need a reachable
+        free/cache_unref in the same class, and free()/cache_unref()
+        results must never be dropped (only refcount-zero ids may be
+        scrubbed or re-allocated)
+    R4  no Python-value-dependent shapes flowing into jitted functions
+        (retrace hazards: pad to a fixed bucket first)
+    R5  donated-cache-dict hygiene: key stores must be device arrays
+        (a raw np array changes the donation mask and recompiles), key
+        deletion changes the pytree structure
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation, formatted ``path:line:col: Rn message``."""
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+class Rule:
+    """Base class: subclasses set ``rule_id``/``title`` and implement
+    ``check``."""
+
+    rule_id: str = ""
+    title: str = ""
+
+    def check(self, tree: ast.AST, path: str) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(path=path, line=getattr(node, "lineno", 0),
+                       col=getattr(node, "col_offset", 0),
+                       rule=self.rule_id, message=message)
+
+
+# ------------------------------------------------------------- AST helpers
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``np.asarray`` for a Name/Attribute chain, None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.AST) -> Optional[str]:
+    """Dotted callee name of a Call node (None for computed callees)."""
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func)
+    return None
+
+
+def contains_len_or_slice(node: ast.AST) -> bool:
+    """True if the expression contains a ``len(...)`` call or a slice —
+    the two spellings of a Python-value-dependent array extent."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and call_name(sub) == "len":
+            return True
+        if isinstance(sub, ast.Slice):
+            return True
+    return False
+
+
+def function_defs(node: ast.AST):
+    """Immediate FunctionDef/AsyncFunctionDef children of a body-carrier."""
+    for child in getattr(node, "body", []):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield child
+
+
+def all_rules() -> List[Rule]:
+    """Instantiate the full registry in rule-id order."""
+    from repro.analysis.rules.device_pulls import DevicePullRule
+    from repro.analysis.rules.donation import DonationMaskRule
+    from repro.analysis.rules.jit_discipline import JitDisciplineRule
+    from repro.analysis.rules.refcounts import RefcountPairingRule
+    from repro.analysis.rules.retrace import RetraceHazardRule
+    return [DevicePullRule(), JitDisciplineRule(), RefcountPairingRule(),
+            RetraceHazardRule(), DonationMaskRule()]
+
+
+__all__ = ["Finding", "Rule", "all_rules", "dotted_name", "call_name",
+           "contains_len_or_slice", "function_defs"]

@@ -1,0 +1,213 @@
+"""R1 — device-pull discipline (DESIGN.md §Step pipeline).
+
+The fused decode path makes exactly ONE device->host transfer per step, and
+it goes through the scheduler's ``_pull()`` choke point so tests can count
+it.  A raw ``np.asarray``/``.item()``/``int()`` on a traced value anywhere
+else in the loop silently adds a hidden sync — the exact perf rot PR 6
+removed.
+
+The rule therefore activates inside any class that defines a ``_pull``
+method (the choke-point contract) and, per method, tracks which local names
+hold *device values*: results of calls to the jitted ``StepFns`` surface
+(``prefill``, ``tree_step``, ``fused_step``, ...), and anything derived
+from them.  A name laundered through ``self._pull(...)`` becomes a host
+value again.  Flagged on device values outside ``_pull`` itself:
+
+  * ``np.asarray(x)`` / ``np.array(x)`` / ``jax.device_get(x)``
+  * ``int(x)`` / ``float(x)`` / ``bool(x)``
+  * ``x.item()`` / ``x.tolist()``
+  * ``x.block_until_ready()`` (flagged unconditionally — it is always a
+    sync, whatever ``x`` is)
+
+Suppress a justified exception with ``# repro-lint: disable=R1``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.rules import Rule, call_name, dotted_name
+
+# the jitted StepFns members whose results live on device
+DEVICE_PRODUCERS = frozenset({
+    "prefill", "prefill_into_slot", "prefill_suffix", "tree_step",
+    "fused_step", "commit", "copy_block", "reset_blocks", "reset_slot",
+    "init_cache",
+})
+PULL_CALLS = frozenset({"np.asarray", "np.array", "numpy.asarray",
+                        "numpy.array", "jax.device_get"})
+SCALAR_CASTS = frozenset({"int", "float", "bool"})
+SYNC_METHODS = frozenset({"item", "tolist"})
+
+
+def _is_device_call(node: ast.AST) -> bool:
+    """Call whose callee is a StepFns member (``fns.fused_step(...)``,
+    ``self.fns.prefill(...)``)."""
+    if not isinstance(node, ast.Call):
+        return False
+    if isinstance(node.func, ast.Attribute) and \
+            node.func.attr in DEVICE_PRODUCERS:
+        return True
+    return False
+
+
+def _is_pull_call(node: ast.AST) -> bool:
+    """A call through the ``_pull`` choke point."""
+    name = call_name(node)
+    return bool(name) and (name == "_pull" or name.endswith("._pull"))
+
+
+def _root(node: ast.AST) -> Optional[str]:
+    """Dotted root a value expression reads from: ``packed[l, 0]`` ->
+    ``packed``; ``self.cache["k"]`` -> ``self.cache``."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return dotted_name(node)
+
+
+class _MethodScanner:
+    """Order-sensitive scan of one method body, tracking device names."""
+
+    def __init__(self, rule: "DevicePullRule", path: str):
+        self.rule = rule
+        self.path = path
+        self.device: Set[str] = set()
+        self.findings: List = []
+
+    # -------------------------------------------------------------- taint
+    def _tainted(self, node: ast.AST) -> bool:
+        """Expression reads a device value (or IS a device call)."""
+        for sub in ast.walk(node):
+            if _is_device_call(sub):
+                return True
+            if _is_pull_call(sub):
+                # a pull result is host data; don't descend further —
+                # handled by the coarse walk being permissive here
+                continue
+            name = dotted_name(sub) if isinstance(
+                sub, (ast.Name, ast.Attribute)) else None
+            if name in self.device:
+                return True
+        return False
+
+    def _bind(self, targets, value: ast.AST) -> None:
+        names = []
+        for t in targets:
+            if isinstance(t, (ast.Tuple, ast.List)):
+                names.extend(n for n in map(dotted_name, t.elts) if n)
+            else:
+                n = dotted_name(t)
+                if n:
+                    names.append(n)
+        if _is_pull_call(value):
+            for n in names:
+                self.device.discard(n)
+        elif _is_device_call(value) or self._tainted(value):
+            for n in names:
+                self.device.add(n)
+        else:
+            for n in names:
+                self.device.discard(n)
+
+    # --------------------------------------------------------- violations
+    def _check_expr(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            if _is_pull_call(sub):
+                continue                      # the blessed choke point
+            name = call_name(sub)
+            if isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr == "block_until_ready":
+                self.findings.append(self.rule.finding(
+                    self.path, sub,
+                    "block_until_ready() is a device sync; route the "
+                    "transfer through the _pull() choke point"))
+                continue
+            args_tainted = any(
+                _root(a) in self.device or _is_device_call(a)
+                for a in sub.args)
+            if name in PULL_CALLS and args_tainted:
+                self.findings.append(self.rule.finding(
+                    self.path, sub,
+                    f"raw device pull {name}() on a traced value outside "
+                    "_pull(); route it through the choke point (or "
+                    "# repro-lint: disable=R1 with a justification)"))
+            elif name in SCALAR_CASTS and args_tainted:
+                self.findings.append(self.rule.finding(
+                    self.path, sub,
+                    f"{name}() on a traced value forces a hidden device "
+                    "sync; pull through _pull() first"))
+            elif isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr in SYNC_METHODS and \
+                    _root(sub.func.value) in self.device:
+                self.findings.append(self.rule.finding(
+                    self.path, sub,
+                    f".{sub.func.attr}() on a traced value is a hidden "
+                    "device sync; pull through _pull() first"))
+
+    # -------------------------------------------------------------- drive
+    def scan(self, body) -> None:
+        for st in body:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue                       # nested scopes: out of scope
+            if isinstance(st, ast.Assign):
+                self._check_expr(st.value)
+                self._bind(st.targets, st.value)
+            elif isinstance(st, (ast.AnnAssign, ast.AugAssign)):
+                if st.value is not None:
+                    self._check_expr(st.value)
+                    self._bind([st.target], st.value)
+            elif isinstance(st, ast.For):
+                self._check_expr(st.iter)
+                if self._tainted(st.iter):
+                    self._bind([st.target], st.iter)
+                self.scan(st.body)
+                self.scan(st.orelse)
+            elif isinstance(st, ast.While):
+                self._check_expr(st.test)
+                self.scan(st.body)
+                self.scan(st.orelse)
+            elif isinstance(st, ast.If):
+                self._check_expr(st.test)
+                self.scan(st.body)
+                self.scan(st.orelse)
+            elif isinstance(st, ast.With):
+                for item in st.items:
+                    self._check_expr(item.context_expr)
+                self.scan(st.body)
+            elif isinstance(st, ast.Try):
+                self.scan(st.body)
+                for h in st.handlers:
+                    self.scan(h.body)
+                self.scan(st.orelse)
+                self.scan(st.finalbody)
+            else:
+                self._check_expr(st)
+
+
+class DevicePullRule(Rule):
+    rule_id = "R1"
+    title = ("device->host transfers go through the _pull() choke point "
+             "(one sync per decode step)")
+
+    def check(self, tree: ast.AST, path: str) -> List:
+        findings: List = []
+        for cls in (n for n in ast.walk(tree)
+                    if isinstance(n, ast.ClassDef)):
+            methods = [m for m in cls.body
+                       if isinstance(m, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))]
+            if not any(m.name == "_pull" for m in methods):
+                continue                       # no choke-point contract
+            for m in methods:
+                if m.name == "_pull":
+                    continue                   # the choke point itself
+                scanner = _MethodScanner(self, path)
+                scanner.scan(m.body)
+                findings.extend(scanner.findings)
+        return findings
+
+
+__all__ = ["DevicePullRule", "DEVICE_PRODUCERS"]

@@ -1,0 +1,87 @@
+"""R5 — donated-cache pytree hygiene (the PR 3 footgun).
+
+The KV cache dict is donated into the fused step (``donate_argnums``
+covers it), so jax derives the donation mask from the pytree's *leaf
+types and structure*.  Two mutations silently invalidate that mask:
+
+* storing a **raw numpy array** under a cache key — the leaf type flips
+  from ``jax.Array`` to ``np.ndarray``, the donation mask changes, and
+  the next call recompiles (and stops donating, doubling peak memory).
+  Device-put the value first;
+* **adding/removing keys** (``del cache[...]`` / ``cache.pop(...)``) —
+  the pytree structure changes, which is a guaranteed retrace.
+
+The rule matches subscript stores / deletes whose base is named
+``cache`` or ends in ``.cache`` (the repo's convention for the donated
+pytree), with the value being an ``np.*`` constructor call.
+
+Suppress a justified exception with ``# repro-lint: disable=R5``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.rules import Rule, call_name, dotted_name
+
+NP_CONSTRUCTORS = frozenset({
+    "np.asarray", "np.array", "np.zeros", "np.ones", "np.full",
+    "np.empty", "np.arange", "numpy.asarray", "numpy.array",
+    "numpy.zeros", "numpy.ones", "numpy.full", "numpy.empty",
+})
+
+
+def _cache_base(node: ast.AST) -> Optional[str]:
+    """Name of the subscript base if it looks like the donated cache."""
+    if not isinstance(node, ast.Subscript):
+        return None
+    base = dotted_name(node.value)
+    if base and (base == "cache" or base.endswith(".cache") or
+                 base.endswith("_cache")):
+        return base
+    return None
+
+
+class DonationMaskRule(Rule):
+    rule_id = "R5"
+    title = ("cache-dict mutations must not change the donation mask "
+             "(no raw np leaves, no key add/remove)")
+
+    def check(self, tree: ast.AST, path: str) -> List:
+        findings: List = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    base = _cache_base(t)
+                    if base and isinstance(node.value, ast.Call) and \
+                            call_name(node.value) in NP_CONSTRUCTORS:
+                        findings.append(self.finding(
+                            path, node,
+                            f"storing a raw numpy array into donated "
+                            f"pytree {base!r} flips the leaf type and "
+                            "invalidates the donation mask (recompile + "
+                            "no donation); jax.device_put it first"))
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    base = _cache_base(t)
+                    if base:
+                        findings.append(self.finding(
+                            path, node,
+                            f"deleting a key from donated pytree "
+                            f"{base!r} changes the pytree structure — "
+                            "guaranteed retrace of every consumer"))
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "pop":
+                base = dotted_name(node.func.value)
+                if base and (base == "cache" or base.endswith(".cache")
+                             or base.endswith("_cache")):
+                    findings.append(self.finding(
+                        path, node,
+                        f"{base}.pop() changes the donated pytree "
+                        "structure — guaranteed retrace of every "
+                        "consumer"))
+        return findings
+
+
+__all__ = ["DonationMaskRule"]

@@ -1,0 +1,119 @@
+"""R2 — jit call-site discipline (DESIGN.md §Compile-once contract).
+
+Every ``jax.jit`` in this repo exists to be compiled exactly once per
+shape bucket, with buffer donation spelled out.  Two ways that rots:
+
+* An **implicit argnums** site — ``@jax.jit`` with no
+  ``donate_argnums``/``static_argnums`` (or the ``*_argnames`` forms).
+  Donation then defaults to "nothing", silently doubling peak KV memory
+  on the fused step, and the reader cannot tell whether that was chosen
+  or forgotten.  The empty tuple is fine; it just has to be *written*.
+
+* A jitted function that **closes over ``self``** — scheduler state read
+  at trace time gets baked into the compiled executable, so later
+  mutation either desyncs silently or forces a retrace.  Everything the
+  function needs must arrive as an argument.
+
+Accepted spellings::
+
+    @functools.partial(jax.jit, donate_argnums=(0,), static_argnums=(2,))
+    step = jax.jit(fn, donate_argnums=())
+
+Suppress a justified exception with ``# repro-lint: disable=R2``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.rules import Rule, call_name, dotted_name
+
+JIT_NAMES = frozenset({"jax.jit", "jit", "pjit", "jax.pjit"})
+ARGNUM_KWARGS = frozenset({"donate_argnums", "static_argnums",
+                           "donate_argnames", "static_argnames"})
+PARTIAL_NAMES = frozenset({"functools.partial", "partial"})
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    return name in JIT_NAMES
+
+
+def _jit_call_kwargs(node: ast.Call) -> Optional[List[str]]:
+    """If ``node`` is a jit application (``jax.jit(...)`` or
+    ``functools.partial(jax.jit, ...)``), return its keyword names,
+    else None."""
+    name = call_name(node)
+    if name in JIT_NAMES:
+        return [kw.arg for kw in node.keywords if kw.arg]
+    if name in PARTIAL_NAMES and node.args and _is_jit_ref(node.args[0]):
+        return [kw.arg for kw in node.keywords if kw.arg]
+    return None
+
+
+class JitDisciplineRule(Rule):
+    rule_id = "R2"
+    title = ("jax.jit sites declare donate_argnums/static_argnums "
+             "explicitly and never close over mutable object state")
+
+    def check(self, tree: ast.AST, path: str) -> List:
+        findings: List = []
+        jitted_fn_names = set()
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    if _is_jit_ref(deco):
+                        findings.append(self.finding(
+                            path, deco,
+                            "bare @jax.jit: spell out donate_argnums=() "
+                            "and static_argnums=() (use functools.partial)"
+                        ))
+                        jitted_fn_names.add(node.name)
+                    elif isinstance(deco, ast.Call):
+                        kwargs = _jit_call_kwargs(deco)
+                        if kwargs is None:
+                            continue
+                        jitted_fn_names.add(node.name)
+                        if not any(k in ARGNUM_KWARGS for k in kwargs):
+                            findings.append(self.finding(
+                                path, deco,
+                                "jit application without explicit "
+                                "donate_argnums/static_argnums"))
+            elif isinstance(node, ast.Call):
+                kwargs = _jit_call_kwargs(node)
+                if kwargs is not None and \
+                        not any(k in ARGNUM_KWARGS for k in kwargs):
+                    findings.append(self.finding(
+                        path, node,
+                        "jit application without explicit "
+                        "donate_argnums/static_argnums"))
+
+        # closure check: jitted defs must not read the enclosing ``self``
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            is_jitted = node.name in jitted_fn_names or any(
+                _is_jit_ref(d) or (isinstance(d, ast.Call) and
+                                   _jit_call_kwargs(d) is not None)
+                for d in node.decorator_list)
+            if not is_jitted:
+                continue
+            params = {a.arg for a in node.args.args +
+                      node.args.posonlyargs + node.args.kwonlyargs}
+            if "self" in params:
+                continue            # a bound method: self is an argument
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name) and sub.id == "self" and \
+                        isinstance(sub.ctx, ast.Load):
+                    findings.append(self.finding(
+                        path, sub,
+                        f"jitted function {node.name!r} closes over "
+                        "mutable object state via `self`; pass the value "
+                        "as an argument instead"))
+                    break
+        return findings
+
+
+__all__ = ["JitDisciplineRule"]

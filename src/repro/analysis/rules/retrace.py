@@ -1,0 +1,132 @@
+"""R4 — retrace hazards (DESIGN.md §Compile-once contract).
+
+A jitted function recompiles for every distinct input *shape*.  The repo's
+defence is the bucket ladder: variable-length host data is padded into one
+of a fixed set of buckets *before* it reaches a jitted callable, so the
+shape set is closed and compile counts stay flat.
+
+This rule tracks names bound to jit applications in the module
+(``step = jax.jit(fn, ...)`` or ``@jax.jit``-style decorated defs) and
+flags call sites where an argument's shape depends on a Python value:
+
+* an array constructor (``np.asarray``/``np.array``/``np.zeros``/...)
+  whose payload contains ``len(...)`` or a variable-bound slice
+  (``toks[n_cached:]``), fed straight into the jitted callable;
+* a variable-bound slice passed directly as an argument.
+
+The fix is always the same: pad into a preallocated fixed-size buffer
+(see ``session.prefill_suffix``'s bucket ladder) so every call presents
+a bucket shape.  Constant slices (``x[:, :4]``) are fine — the extent is
+static.  Wrapper methods like ``prefill_suffix`` are deliberately *not*
+treated as jitted callables: they ARE the padding layer.
+
+Suppress a justified exception with ``# repro-lint: disable=R4``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.rules import Rule, call_name, dotted_name
+
+ARRAY_CONSTRUCTORS = frozenset({
+    "np.asarray", "np.array", "np.zeros", "np.ones", "np.full",
+    "np.empty", "numpy.asarray", "numpy.array", "numpy.zeros",
+    "numpy.ones", "numpy.full", "numpy.empty",
+    "jnp.asarray", "jnp.array", "jnp.zeros", "jnp.ones", "jnp.full",
+})
+JIT_NAMES = frozenset({"jax.jit", "jit", "pjit", "jax.pjit"})
+PARTIAL_NAMES = frozenset({"functools.partial", "partial"})
+
+
+def _is_jit_application(node: ast.AST) -> bool:
+    name = call_name(node)
+    if name in JIT_NAMES:
+        return True
+    if name in PARTIAL_NAMES and isinstance(node, ast.Call) and \
+            node.args and dotted_name(node.args[0]) in JIT_NAMES:
+        return True
+    return False
+
+
+def _dynamic_slice(node: ast.Slice) -> bool:
+    """Slice whose bound is a runtime Python value (not None/constant)."""
+    for bound in (node.lower, node.upper):
+        if bound is None or isinstance(bound, ast.Constant):
+            continue
+        if isinstance(bound, ast.UnaryOp) and \
+                isinstance(bound.operand, ast.Constant):
+            continue               # x[:-1] — static extent
+        return True
+    return False
+
+
+def _dynamic_extent(node: ast.AST) -> bool:
+    """Expression whose resulting array extent depends on a Python value:
+    contains ``len(...)`` or a variable-bound slice."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and call_name(sub) == "len":
+            return True
+        if isinstance(sub, ast.Slice) and _dynamic_slice(sub):
+            return True
+    return False
+
+
+def _collect_jitted_names(tree: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and \
+                _is_jit_application(node.value):
+            for t in node.targets:
+                n = dotted_name(t)
+                if n:
+                    names.add(n)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for deco in node.decorator_list:
+                if dotted_name(deco) in JIT_NAMES or \
+                        _is_jit_application(deco):
+                    names.add(node.name)
+    return names
+
+
+class RetraceHazardRule(Rule):
+    rule_id = "R4"
+    title = ("no Python-value-dependent shapes into jitted callables — "
+             "pad into a fixed bucket first")
+
+    def check(self, tree: ast.AST, path: str) -> List:
+        jitted = _collect_jitted_names(tree)
+        if not jitted:
+            return []
+        findings: List = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = call_name(node)
+            if callee not in jitted:
+                continue
+            for arg in list(node.args) + [kw.value for kw in
+                                          node.keywords]:
+                hazard = False
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Call) and \
+                            call_name(sub) in ARRAY_CONSTRUCTORS and \
+                            any(_dynamic_extent(a) for a in sub.args):
+                        hazard = True
+                        break
+                    if isinstance(sub, ast.Subscript) and \
+                            isinstance(sub.slice, ast.Slice) and \
+                            _dynamic_slice(sub.slice):
+                        hazard = True
+                        break
+                if hazard:
+                    findings.append(self.finding(
+                        path, arg,
+                        f"argument to jitted {callee!r} has a "
+                        "Python-value-dependent shape (retrace per "
+                        "distinct length); pad into a fixed bucket "
+                        "before the call"))
+        return findings
+
+
+__all__ = ["RetraceHazardRule"]

@@ -51,7 +51,8 @@ def main() -> None:
     print(f"{args.arch}: {cfg.n_params()/1e6:.0f}M params")
     loss = lambda p, b: tx.lm_loss(cfg, p, b["tokens"], b["labels"])
     step = jax.jit(make_train_step(loss, lr=args.lr,
-                                   accum_steps=args.accum))
+                                   accum_steps=args.accum),
+                   donate_argnums=())
     mgr = CheckpointManager(args.ckpt_dir, keep=3)
     params = tx.init_params(cfg, jax.random.key(0))
     opt = adamw_init(params)

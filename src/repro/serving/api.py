@@ -102,6 +102,11 @@ class EngineConfig:
     # that never verify on a namespace get their quota driven to zero and
     # their retrieve cost skipped (core/autotune.py)
     autotune: bool = False
+    # sanitize: opt-in runtime sanitizer (repro.analysis.sanitizer) —
+    # per-request lifecycle state machine, shadow block-ownership ledger,
+    # retrace monitor.  Debug/CI tool: adds host work and device probes
+    # but never changes outputs; default-off costs nothing.
+    sanitize: bool = False
 
     @property
     def slots(self) -> int:
@@ -303,7 +308,7 @@ class ServingEngine:
             prefix_cache_blocks=config.prefix_cache_blocks,
             lane_shares=config.lane_shares,
             draft_budget_caps=config.draft_budget_caps,
-            autotune=config.autotune)
+            autotune=config.autotune, sanitize=config.sanitize)
 
     # ---- request surface
     def submit(self, request: Union[Request, Sequence[int]],

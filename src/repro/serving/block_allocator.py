@@ -91,6 +91,14 @@ class BlockAllocator:
         # block, tracked in _cache_held).  Absent key == free (refcount 0).
         self._ref: Dict[int, int] = {}
         self._cache_held: set = set()
+        # Optional event sink (the runtime sanitizer's shadow ledger).
+        # Pure observation: the allocator behaves identically with or
+        # without one attached.
+        self.observer = None
+
+    def _emit(self, event: str, **kw) -> None:
+        if self.observer is not None:
+            self.observer.on_event(event, **kw)
 
     # ------------------------------------------------------------------ state
     @property
@@ -180,6 +188,7 @@ class BlockAllocator:
             raise ValueError(f"n_initial={n_initial} < {len(shared)} shared")
         self._reserved[rid] = reserve
         self._tables[rid] = []
+        self._emit("alloc", rid=rid, reserve=reserve)
         if shared:
             self.share(rid, shared)
         return self.extend(rid, n_initial - len(shared))
@@ -202,6 +211,7 @@ class BlockAllocator:
         for b in blocks:
             self._ref[b] += 1
             table.append(b)
+        self._emit("share", rid=rid, blocks=list(blocks))
 
     def extend(self, rid: int, n_more: int) -> List[int]:
         """Grow ``rid``'s table by ``n_more`` physical blocks.  Never fails
@@ -222,6 +232,7 @@ class BlockAllocator:
             assert self._ref.get(b, 0) == 0, f"free-list block {b} is live"
             self._ref[b] = 1
         table.extend(new)
+        self._emit("extend", rid=rid, blocks=list(new))
         return new
 
     def fork_cow(self, rid: int, src_block: int) -> int:
@@ -242,6 +253,8 @@ class BlockAllocator:
         co-resident request stay out of the free list, so the caller can
         never scrub or re-allocate KV another owner depends on.  Freed ids
         must be scrubbed BEFORE re-allocation (reset-slot hygiene)."""
+        if rid in self._tables:
+            self._emit("free_enter", rid=rid, table=list(self._tables[rid]))
         table = self._tables.pop(rid, None)
         if table is None:
             raise KeyError(f"unknown request {rid}")
@@ -255,12 +268,14 @@ class BlockAllocator:
             else:
                 self._ref[b] = n
         self._free.extend(freed)
+        self._emit("free", rid=rid, freed=list(freed))
         return freed
 
     # ---------------------------------------------------------- prefix cache
     def cache_ref(self, blocks: Iterable[int]) -> None:
         """The prefix cache takes (at most one) ownership reference on each
         block, pinning it out of the free list across request retirement."""
+        taken: List[int] = []
         for b in blocks:
             b = int(b)
             if b in self._cache_held:
@@ -269,17 +284,21 @@ class BlockAllocator:
                 raise ValueError(f"block {b} is not live; cannot cache_ref")
             self._ref[b] += 1
             self._cache_held.add(b)
+            taken.append(b)
+        self._emit("cache_ref", blocks=taken)
 
     def cache_unref(self, blocks: Iterable[int]) -> List[int]:
         """Release the prefix cache's reference (eviction).  Returns the
         blocks that became free as a result — the caller must scrub those
         before they can be re-allocated."""
         freed: List[int] = []
+        dropped: List[int] = []
         for b in blocks:
             b = int(b)
             if b not in self._cache_held:
                 raise ValueError(f"block {b} is not cache-held")
             self._cache_held.discard(b)
+            dropped.append(b)
             n = self._ref[b] - 1
             if n == 0:
                 del self._ref[b]
@@ -287,6 +306,7 @@ class BlockAllocator:
             else:
                 self._ref[b] = n
         self._free.extend(freed)
+        self._emit("cache_unref", blocks=dropped, freed=list(freed))
         return freed
 
     # ---------------------------------------------------------- fragmentation

@@ -222,7 +222,7 @@ class ContinuousScheduler:
                  prefix_cache_blocks: Optional[int] = None,
                  lane_shares: Optional[Dict[str, float]] = None,
                  draft_budget_caps: Optional[Dict[str, int]] = None,
-                 autotune=False):
+                 autotune=False, sanitize: bool = False):
         if not fns.supports_slot_serving:
             raise ValueError("StepFns lack prefill_into_slot/init_cache; "
                              "continuous batching needs per-slot admission")
@@ -344,6 +344,14 @@ class ContinuousScheduler:
         # scrubbing needs a cache to dispatch against, so the ids wait here
         # and flush right after cache creation (satellite: silent scrub skip)
         self._scrub_backlog: List[int] = []
+        # ---- runtime sanitizer (DESIGN.md §Invariants & analysis): opt-in
+        # shadow checks — request lifecycle machine, block-ownership ledger
+        # on the allocator's observer hook, retrace monitor.  Default-off
+        # costs nothing: the module is not even imported.
+        self.sanitizer = None
+        if sanitize:
+            from repro.analysis.sanitizer import Sanitizer
+            self.sanitizer = Sanitizer.attach(self)
 
     # ------------------------------------------------------------------ state
     @property
@@ -424,6 +432,8 @@ class ContinuousScheduler:
     def _take_queued(self, nsn: str) -> RequestState:
         """Dequeue the namespace's head and charge its stride pass."""
         rs = self.queues[nsn].popleft()
+        if self.sanitizer is not None:
+            self.sanitizer.transition(rs.rid, "admitted")
         if self.lane_shares:
             pas = max(self._q_pass.get(nsn, 0.0), self._vtime)
             self._vtime = pas
@@ -490,6 +500,10 @@ class ContinuousScheduler:
         matched full blocks into the table head by refcount, allocate a COW
         fork target for a partially-matched boundary block, and only then
         take fresh blocks for the uncached tail."""
+        if self.sanitizer is not None:
+            # poison-on-free: before blocks can be handed back out, every
+            # freed+scrubbed block must still hold all-zero KV rows
+            self.sanitizer.check_poison(self.cache)
         demand = self._demand_blocks(len(rs.prompt), rs.max_new_tokens)
         match = None
         if self.prefix is not None:
@@ -560,6 +574,8 @@ class ContinuousScheduler:
             chunk = freed[i:i + bpl]
             ids[:len(chunk)] = np.asarray(chunk, dtype=np.int32)
             self.cache = self.fns.reset_blocks(self.cache, ids)
+        if self.sanitizer is not None:
+            self.sanitizer.on_scrubbed(int(b) for b in freed)
 
     def _sync_tables(self) -> None:
         """Push host-side block-table edits into the device cache dict (the
@@ -649,6 +665,8 @@ class ContinuousScheduler:
             rs.budget_ctl = AdaptiveBudget.from_policy(
                 policy, min(self.config.decoding_length, self.width - 1))
         rs.submit_t = time.perf_counter()
+        if self.sanitizer is not None:
+            self.sanitizer.transition(rid, "queued")
         nsn = policy.namespace
         q = self.queues.get(nsn)
         if q is None:
@@ -676,6 +694,8 @@ class ContinuousScheduler:
         """Drain queue + lanes; results in submission order."""
         while not self.idle:
             self.step()
+        if self.sanitizer is not None:
+            self.sanitizer.verify_idle(self)
         return [self.results[rid] for rid in self._order
                 if rid in self.results]
 
@@ -818,6 +838,8 @@ class ContinuousScheduler:
         if rs.done:
             self._observe_output(rs)
             return False
+        if self.sanitizer is not None:
+            self.sanitizer.transition(rs.rid, "active")
         self.states[lane] = rs
         self.lens[lane] = len(rs.prompt)
         return True
@@ -1066,6 +1088,10 @@ class ContinuousScheduler:
                 if rs.rid == rid:
                     del q[i]
                     rs.cancel()
+                    if self.sanitizer is not None:
+                        # held nothing: queued requests retire directly
+                        self.sanitizer.transition(rid, "retiring")
+                        self.sanitizer.transition(rid, "drained")
                     rs.finish_t = time.perf_counter()
                     res = rs.result()
                     self.results[rid] = res
@@ -1097,6 +1123,11 @@ class ContinuousScheduler:
                 del self._pending[lane]
                 del self._pending_chosen[lane]
                 rs.cancel()
+                if self.sanitizer is not None:
+                    # retiring, NOT drained: the blocks stay owned until
+                    # the deferred drain (the in-flight prefill may still
+                    # write into them — PR 8's use-after-free window)
+                    self.sanitizer.transition(rid, "retiring")
                 rs.finish_t = time.perf_counter()
                 rs.lane = -1
                 if self.allocator is not None:
@@ -1128,6 +1159,8 @@ class ContinuousScheduler:
         physical blocks stay owned by this rid until the deferred free, so
         they cannot be reallocated in between) and the dense lane scrub
         fires (a scrub after reuse would destroy the next request's KV)."""
+        if self.sanitizer is not None:
+            self.sanitizer.transition(rs.rid, "retiring")
         rs.finish_t = time.perf_counter()
         rs.lane = -1
         self.states[lane] = None
@@ -1149,6 +1182,8 @@ class ContinuousScheduler:
 
     def _finish(self, rs: RequestState) -> RequestResult:
         """Immediate retire (serial mode, cancel, finish-at-prefill)."""
+        if self.sanitizer is not None:
+            self.sanitizer.transition(rs.rid, "retiring")
         rs.finish_t = time.perf_counter()
         lane = rs.lane
         rs.lane = -1
@@ -1188,6 +1223,8 @@ class ContinuousScheduler:
             # deferred retirement).
             freed = self.allocator.free(rs.rid)
             self._scrub_blocks(freed)
+        if self.sanitizer is not None:
+            self.sanitizer.transition(rs.rid, "drained")
         if already:
             return self.results[rs.rid]
         return self._finalize_result(rs)

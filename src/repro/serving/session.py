@@ -152,7 +152,7 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
         return _choose(lg, lens[:, None], lane_params)[:, 0]
 
     if cfg.kv_layout == "paged":
-        @jax.jit
+        @functools.partial(jax.jit, donate_argnums=())
         def _prefill(tokens, lens, block_tables, lane_params):
             cache = tx.init_paged_cache(cfg, tokens.shape[0], n_blocks)
             cache["block_tables"] = jnp.asarray(block_tables, jnp.int32)
@@ -230,19 +230,29 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
         suffix_buckets.append(_cap)
         suffix_buckets = tuple(suffix_buckets)
 
+        # preallocated staging buffers: jax copies numpy inputs at
+        # dispatch, so reusing host scratch across calls is safe and
+        # avoids three fresh allocations per suffix prefill
+        _pad_bufs = {b: np.full((1, b), pad_id, np.int32)
+                     for b in suffix_buckets}
+        _off_buf = np.zeros((1,), np.int32)
+        _len_buf = np.zeros((1,), np.int32)
+
         def prefill_suffix(cache, slot, tokens, offset, lane_params=None):
             """tokens (1, n): the UN-padded prompt suffix; offset: cached
             prefix length.  Pads n up to the smallest suffix bucket."""
             tokens = np.asarray(tokens, np.int32)
             n = tokens.shape[1]
             bucket = next(b for b in suffix_buckets if b >= n)
-            padded = np.full((1, bucket), pad_id, np.int32)
+            padded = _pad_bufs[bucket]
             padded[0, :n] = tokens[0]
+            padded[0, n:] = pad_id
+            _off_buf[0] = offset
+            _len_buf[0] = n
             if lane_params is None:
                 lane_params = _default_lane_params(1)
             return _prefill_suffix(cache, slot, padded,
-                                   np.asarray([offset], np.int32),
-                                   np.asarray([n], np.int32), lane_params)
+                                   _off_buf, _len_buf, lane_params)
 
         def copy_block(cache, src, dst):
             return _copy_block(cache, np.int32(src), np.int32(dst))
@@ -292,7 +302,7 @@ def make_session_fns(cfg: tx.TransformerConfig, params: tx.Params, *,
                        per_lane_params=True, session_defaults=defaults,
                        sampling=sampling)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=())
     def _prefill(tokens, lens, lane_params):
         cache = tx.init_cache(cfg, tokens.shape[0])
         cache, last_logits = tx.prefill(cfg, params, tokens, lens, cache)

@@ -16,6 +16,11 @@ Sessions compile once per matrix cell and are reused across examples
 budget).  Examples are generated from a drawn integer seed so the same
 code path works with real hypothesis and with the shim's reduced strategy
 surface.
+
+Every scheduler here runs with ``sanitize=True`` (ISSUE 9): the runtime
+sanitizer's lifecycle machine, shadow block ledger and retrace monitor
+audit each run and raise on any violation — so this suite doubles as the
+allocator/lifecycle fuzz for the analysis layer, at zero extra cost.
 """
 import jax
 import numpy as np
@@ -80,7 +85,7 @@ def test_fuzz_scheduler_matches_reference_decode(seed, n_req, bs_idx):
     for cell in _cells(block_size):
         fns = _get_fns(*cell)
         sched = ContinuousScheduler(fns, la, lanes=lanes,
-                                    prefill_len=PREFILL)
+                                    prefill_len=PREFILL, sanitize=True)
         rid_to_idx = {}
         for i in order:
             rid_to_idx[sched.submit(prompts[i], budgets[i])] = int(i)
@@ -120,7 +125,8 @@ def test_fuzz_paged_backpressure_lossless(seed):
             _CFG, _PARAMS, slots=SLOTS, prefill_len=PREFILL,
             kv_layout="paged", block_size=8, n_blocks=7)
     la = LookaheadConfig(decoding_length=SLOTS - 1, branch_length=4)
-    sched = ContinuousScheduler(fns, la, lanes=2, prefill_len=PREFILL)
+    sched = ContinuousScheduler(fns, la, lanes=2, prefill_len=PREFILL,
+                                sanitize=True)
     rid_to_idx = {sched.submit(p, m): i
                   for i, (p, m) in enumerate(zip(prompts, budgets))}
     res = sched.run()
@@ -153,7 +159,8 @@ def test_fuzz_overlap_mode_lossless(seed, n_req, bs_idx):
         for overlap in (False, True):
             sched = ContinuousScheduler(fns, la, lanes=lanes,
                                         prefill_len=PREFILL,
-                                        overlap_drafts=overlap)
+                                        overlap_drafts=overlap,
+                                        sanitize=True)
             rid_to_idx = {sched.submit(p, m): i
                           for i, (p, m) in enumerate(zip(prompts, budgets))}
             res = sched.run()
@@ -205,7 +212,7 @@ def test_fuzz_draft_sources_lossless(seed, combo_idx, adaptive):
         fns = _get_fns(*cell)
         sched = ContinuousScheduler(fns, la, lanes=lanes,
                                     prefill_len=PREFILL,
-                                    draft_policy=policy)
+                                    draft_policy=policy, sanitize=True)
         rid_to_idx = {sched.submit(p, m): i
                       for i, (p, m) in enumerate(zip(prompts, budgets))}
         res = sched.run()
@@ -246,7 +253,7 @@ def test_fuzz_prefix_cache_lossless(seed, bs_idx, overlap):
             sched = ContinuousScheduler(fns, la, lanes=lanes,
                                         prefill_len=PREFILL,
                                         overlap_drafts=bool(overlap),
-                                        prefix_cache=cached)
+                                        prefix_cache=cached, sanitize=True)
             rid_to_idx = {sched.submit(p, m): i
                           for i, (p, m) in enumerate(zip(prompts, budgets))}
             res = sched.run()
@@ -285,7 +292,8 @@ def test_fuzz_cancel_under_overlap_lossless(seed, n_req, bs_idx):
         fns = _get_fns(*cell)
         sched = ContinuousScheduler(fns, la, lanes=lanes,
                                     prefill_len=PREFILL,
-                                    overlap_drafts=True, scrub_freed=True)
+                                    overlap_drafts=True, scrub_freed=True,
+                                    sanitize=True)
         rid_to_idx = {sched.submit(p, m): i
                       for i, (p, m) in enumerate(zip(prompts, budgets))}
         step = 0
@@ -346,7 +354,7 @@ def test_fuzz_mixed_namespace_autotune_lossless(seed, shares_on, bs_idx):
             sched = ContinuousScheduler(fns, la, lanes=lanes,
                                         prefill_len=PREFILL,
                                         lane_shares=shares,
-                                        autotune=autotune)
+                                        autotune=autotune, sanitize=True)
             handles = [sched.submit_request(Request(
                 prompt=list(p),
                 params=SamplingParams(max_new_tokens=m, draft=pol)))
