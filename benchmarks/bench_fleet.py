@@ -1,0 +1,386 @@
+"""Fleet serving: namespace-affinity routing vs round-robin, and
+warm-restart draft-state recovery (repro.fleet, DESIGN.md §Fleet serving).
+
+Retrieval drafting only pays when the trie has seen the request's traffic
+before.  The workload here is three tenants, each replaying a small pool
+of prompts over several rounds (the RAG/chat shape: repeats of a prompt
+warm its chains; the low-reuse guided profile keeps cross-prompt
+generalization weak, so WHERE the repeats land decides acceptance).
+Submission order is shuffled per round so round-robin placement cannot
+accidentally align a prompt's repeats onto one replica.  Cells:
+
+  * ``single``       — one engine, the bit-identity reference;
+  * ``affinity``     — N-replica fleet, consistent-hash namespace routing:
+                       every tenant's repeats land on the replica whose
+                       trie they warmed;
+  * ``round_robin``  — same fleet, placement ignores namespaces: each
+                       prompt's repeats scatter, most visits are cold;
+  * ``gossip_spill`` — one tenant warms replica A; replica B (the spill
+                       target) serves the same prompts cold, then again
+                       after ONE gossip exchange — the acceptance jump is
+                       what gossip buys a backpressure spill;
+  * ``warm_restart`` — a donor engine (paged KV + prefix cache) serves the
+                       workload cold and persists its draft state; a fresh
+                       engine loads the file (trie + n-gram + primed
+                       prefix keys) and serves the same stream.
+
+Asserts: every fleet cell's outputs are bit-identical to the single
+reference (I1 — routing/gossip are pure performance policies); affinity
+beats round-robin on mean per-namespace trie acceptance; gossip lifts the
+cold spill target's acceptance; the warm restart recovers >= 80% of the
+donor's end-of-run acceptance.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet --json-out BENCH_fleet.json
+
+Output CSV: name,us_per_token,derived
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import (bench_model, emit, make_dataset,
+                               make_guided_session_fns)
+from repro.core import DraftPolicy, Request, SamplingParams
+from repro.fleet import EngineReplica, FleetRouter, GossipCoordinator
+from repro.serving.api import EngineConfig, ServingEngine
+
+PREFILL_LEN = 64
+LANES = 2
+DECODING_LENGTH = 15          # device tree width = 16 slots
+BRANCH_LENGTH = 8
+# low-reuse guided profile ("dolly"): continuations are prompt-specific,
+# so acceptance tracks whether THIS prompt's earlier repeats warmed the
+# serving replica — the quantity routing controls.  A high-reuse profile
+# saturates every trie after one round and hides the placement policy.
+PHASE = 11
+NAMESPACES = ("docs", "code", "chat")
+
+
+# ------------------------------------------------------------------ workload
+def make_workload(k_prompts: int, repeats: int,
+                  max_new: int) -> List[Request]:
+    """``repeats`` rounds over three tenants, each replaying its own pool
+    of ``k_prompts`` prompts.  Each round's submission order is shuffled
+    (seeded) — with a fixed order, a round length divisible by the replica
+    count would hand round-robin accidental per-prompt affinity."""
+    ds = make_dataset("antrag", len(NAMESPACES) * k_prompts,
+                      prompt_cap=PREFILL_LEN - 8)
+    pools: Dict[str, List[List[int]]] = {}
+    for i, ns in enumerate(NAMESPACES):
+        pools[ns] = [list(p) for p, _ in
+                     ds[i * k_prompts:(i + 1) * k_prompts]]
+    reqs: List[Request] = []
+    for rnd in range(repeats):
+        round_reqs: List[Request] = []
+        for ns in NAMESPACES:
+            policy = DraftPolicy(sources=("trie",), namespace=ns).validate()
+            for prompt in pools[ns]:
+                round_reqs.append(Request(
+                    prompt=list(prompt),
+                    params=SamplingParams(max_new_tokens=max_new,
+                                          draft=policy)))
+        np.random.RandomState(1000 + rnd).shuffle(round_reqs)
+        reqs.extend(round_reqs)
+    return reqs
+
+
+# ------------------------------------------------------------- acceptance
+def _acceptance_by_ns(snap: dict, before: Optional[dict] = None
+                      ) -> Dict[str, Dict[str, float]]:
+    """Per-namespace per-source acceptance from a SchedulerStats snapshot,
+    optionally as a delta over an earlier snapshot (so prefix-priming
+    requests issued by ``load_draft_state`` never dilute the measurement)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for ns, s in snap.get("namespaces", {}).items():
+        b = (before or {}).get("namespaces", {}).get(
+            ns, {"source_drafted": {}, "source_accepted": {}})
+        drafted = {k: int(v) - int(b["source_drafted"].get(k, 0))
+                   for k, v in dict(s["source_drafted"]).items()}
+        accepted = {k: int(v) - int(b["source_accepted"].get(k, 0))
+                    for k, v in dict(s["source_accepted"]).items()}
+        out[ns] = {k: accepted.get(k, 0) / max(v, 1)
+                   for k, v in drafted.items() if v > 0}
+    return out
+
+
+def _mean_trie_acceptance(acc_by_ns: Dict[str, Dict[str, float]]) -> float:
+    rates = [acc_by_ns[ns]["trie"] for ns in NAMESPACES
+             if ns in acc_by_ns and "trie" in acc_by_ns[ns]]
+    return sum(rates) / max(len(rates), 1)
+
+
+# ----------------------------------------------------------------- drivers
+def _run_single(fns, ecfg: EngineConfig, reqs: List[Request]
+                ) -> Tuple[List[List[int]], ServingEngine, float]:
+    eng = ServingEngine(fns, ecfg)
+    handles = [eng.submit(Request(prompt=list(r.prompt), params=r.params))
+               for r in reqs]
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    return [h.result().tokens for h in handles], eng, wall
+
+
+def _run_fleet(fns, ecfg: EngineConfig, reqs: List[Request], *,
+               policy: str, n_replicas: int, gossip_every: int = 0
+               ) -> Tuple[List[List[int]], "FleetStats", int, float]:
+    """One fleet generation.  ``max_queue_depth`` is set above the whole
+    workload so no request spills — the cells compare pure placement
+    policies (backpressure spill is exercised by tests/test_fleet.py)."""
+    replicas = [EngineReplica(lambda: ServingEngine(fns, ecfg),
+                              replica_id=f"r{i}")
+                for i in range(n_replicas)]
+    router = FleetRouter(replicas, policy=policy,
+                         max_queue_depth=len(reqs) + 1)
+    gossip = GossipCoordinator(replicas, every=gossip_every)
+    t0 = time.perf_counter()
+    for r in reqs:
+        router.submit(r.prompt, r.params)
+        router.step_all()              # keep lanes busy while admitting
+        gossip.tick()
+    while not router.idle:
+        router.step_all()
+        gossip.tick()
+    wall = time.perf_counter() - t0
+    tokens = [res["tokens"] for res in router.results()]
+    fs = router.fleet_stats()
+    router.close()
+    return tokens, fs, gossip.exchanges, wall
+
+
+# ------------------------------------------------------------------- cells
+def run_routing(k_prompts: int = 4, repeats: int = 4, max_new: int = 16,
+                n_replicas: int = 3) -> dict:
+    cfg, params = bench_model()
+    ecfg = EngineConfig(lanes=LANES, prefill_len=PREFILL_LEN,
+                        decoding_length=DECODING_LENGTH,
+                        branch_length=BRANCH_LENGTH)
+    fns = make_guided_session_fns(cfg, params, phase=PHASE,
+                                  slots=ecfg.slots,
+                                  prefill_len=PREFILL_LEN)
+    reqs = make_workload(k_prompts, repeats, max_new)
+    _run_single(fns, ecfg, reqs[:LANES])                   # compile warmup
+
+    doc: dict = {"k_prompts": k_prompts, "repeats": repeats,
+                 "max_new": max_new, "replicas": n_replicas,
+                 "namespaces": list(NAMESPACES), "cells": {}}
+
+    ref_tokens, ref_eng, ref_wall = _run_single(fns, ecfg, reqs)
+    ref_acc = _acceptance_by_ns(ref_eng.scheduler.stats.snapshot())
+    ref_tok = sum(len(t) for t in ref_tokens)
+    doc["cells"]["single"] = {
+        "tokens_per_s": round(ref_tok / ref_wall, 2),
+        "mean_trie_acceptance": round(_mean_trie_acceptance(ref_acc), 4)}
+    emit("fleet[single]", ref_wall / max(ref_tok, 1) * 1e6,
+         f"{ref_tok / ref_wall:.1f} tok/s | "
+         f"trie-acc {_mean_trie_acceptance(ref_acc):.0%}")
+
+    accs: Dict[str, float] = {}
+    for name in ("affinity", "round_robin"):
+        tokens, fs, exchanges, wall = _run_fleet(
+            fns, ecfg, reqs, policy=name, n_replicas=n_replicas)
+        assert tokens == ref_tokens, \
+            f"fleet cell {name!r} changed an output (I1 violation)"
+        acc = _mean_trie_acceptance(fs.source_acceptance())
+        accs[name] = acc
+        tok = sum(len(t) for t in tokens)
+        doc["cells"][name] = {
+            "tokens_per_s": round(tok / wall, 2),
+            "mean_trie_acceptance": round(acc, 4),
+            "per_namespace": {ns: round(r.get("trie", 0.0), 4)
+                              for ns, r in fs.source_acceptance().items()},
+            "affinity_hits": fs.affinity_hits, "spills": fs.spills,
+            "trie_nodes": [s["trie_nodes"] for s in fs.replicas]}
+        emit(f"fleet[{name}]", wall / max(tok, 1) * 1e6,
+             f"{tok / wall:.1f} tok/s | trie-acc {acc:.0%} | "
+             f"{fs.affinity_hits} affinity / {fs.spills} spills | "
+             "lossless ✓")
+
+    assert accs["affinity"] > accs["round_robin"], \
+        (f"affinity routing did not beat round-robin on mean trie "
+         f"acceptance: {accs['affinity']:.3f} vs {accs['round_robin']:.3f}")
+    doc["affinity_vs_round_robin"] = round(
+        accs["affinity"] / max(accs["round_robin"], 1e-9), 4)
+    emit("fleet_acceptance[affinity/round_robin]", 0.0,
+         f"{doc['affinity_vs_round_robin']:.2f}x")
+    return doc
+
+
+def run_gossip_spill(k_prompts: int = 4, warm_rounds: int = 2,
+                     max_new: int = 16) -> dict:
+    """What gossip buys a backpressure spill: replica A serves a tenant
+    for ``warm_rounds`` rounds; replica B — the spill target — serves the
+    same prompts cold, then again after ONE gossip exchange.  All three
+    B-side waves must be bit-identical (I1); the post-gossip wave's trie
+    acceptance must beat the cold wave's."""
+    cfg, params = bench_model()
+    ecfg = EngineConfig(lanes=LANES, prefill_len=PREFILL_LEN,
+                        decoding_length=DECODING_LENGTH,
+                        branch_length=BRANCH_LENGTH)
+    fns = make_guided_session_fns(cfg, params, phase=PHASE,
+                                  slots=ecfg.slots,
+                                  prefill_len=PREFILL_LEN)
+    ds = make_dataset("antrag", k_prompts, prompt_cap=PREFILL_LEN - 8)
+    policy = DraftPolicy(sources=("trie",), namespace="docs").validate()
+
+    def wave() -> List[Request]:
+        return [Request(prompt=list(p),
+                        params=SamplingParams(max_new_tokens=max_new,
+                                              draft=policy))
+                for p, _ in ds]
+
+    rep_a = EngineReplica(lambda: ServingEngine(fns, ecfg), replica_id="rA")
+    rep_b = EngineReplica(lambda: ServingEngine(fns, ecfg), replica_id="rB")
+
+    def serve(rep: EngineReplica, reqs: List[Request]):
+        before = rep.stats_snapshot()
+        rids = [rep.submit(r.prompt, r.params) for r in reqs]
+        rep.drain()
+        tokens = [rep.result(rid)["tokens"] for rid in rids]
+        acc = _mean_trie_acceptance(
+            _acceptance_by_ns(rep.stats_snapshot(), before))
+        return tokens, acc
+
+    for _ in range(warm_rounds):
+        ref_tokens, _ = serve(rep_a, wave())
+    cold_tokens, cold_acc = serve(rep_b, wave())
+    GossipCoordinator([rep_a, rep_b]).exchange()
+    warm_tokens, warm_acc = serve(rep_b, wave())
+    rep_a.close()
+    rep_b.close()
+
+    assert cold_tokens == ref_tokens == warm_tokens, \
+        "gossip changed an output (I1 violation)"
+    assert warm_acc > cold_acc, \
+        (f"gossip did not lift the spill target's acceptance: "
+         f"{cold_acc:.3f} cold vs {warm_acc:.3f} after exchange")
+    cell = {"cold_acceptance": round(cold_acc, 4),
+            "post_gossip_acceptance": round(warm_acc, 4),
+            "lift": round(warm_acc / max(cold_acc, 1e-9), 4)}
+    emit("fleet[gossip_spill]", 0.0,
+         f"spill-target acc {cold_acc:.0%} -> {warm_acc:.0%} after one "
+         f"exchange ({cell['lift']:.2f}x) | lossless ✓")
+    return cell
+
+
+def run_warm_restart(k_prompts: int = 4, repeats: int = 4,
+                     max_new: int = 16) -> dict:
+    """Donor serves cold (paged KV + prefix cache), persists draft state;
+    a fresh engine loads the file and serves the same stream.  The warm
+    engine must recover >= 80% of the donor's acceptance and produce
+    bit-identical tokens."""
+    from repro.serving.block_allocator import demand_blocks
+
+    block_size = 16
+    cfg, params = bench_model()
+    slots = 1 + DECODING_LENGTH
+    per_lane = demand_blocks(PREFILL_LEN, max_new, slots,
+                             cfg.max_seq_len, block_size)
+    # pool headroom for the primed prefix keys: every distinct prompt's
+    # chain must stay resident through the serving run, or priming is
+    # evicted before the first lookup can hit it
+    prime_blocks = (len(NAMESPACES) * k_prompts
+                    * (-(-(PREFILL_LEN + max_new) // block_size) + 1))
+    n_blocks = 1 + (LANES + 2) * per_lane + prime_blocks
+    ecfg = EngineConfig(lanes=LANES, prefill_len=PREFILL_LEN,
+                        decoding_length=DECODING_LENGTH,
+                        branch_length=BRANCH_LENGTH, kv_layout="paged",
+                        block_size=block_size, n_blocks=n_blocks,
+                        prefix_cache=True)
+    fns = make_guided_session_fns(cfg, params, phase=PHASE, slots=slots,
+                                  prefill_len=PREFILL_LEN,
+                                  kv_layout="paged", block_size=block_size,
+                                  n_blocks=n_blocks)
+    reqs = make_workload(k_prompts, repeats, max_new)
+    _run_single(fns, ecfg, reqs[:LANES])                   # compile warmup
+
+    donor_tokens, donor, donor_wall = _run_single(fns, ecfg, reqs)
+    donor_acc = _mean_trie_acceptance(
+        _acceptance_by_ns(donor.scheduler.stats.snapshot()))
+    donor_tok = sum(len(t) for t in donor_tokens)
+
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="repro-warm-")
+    os.close(fd)
+    try:
+        donor.save_draft_state(path)
+        size_kb = os.path.getsize(path) / 1024
+
+        warm = ServingEngine(fns, ecfg)
+        warm.load_draft_state(path)          # trie+ngram + primed prefix
+        base = warm.scheduler.stats.snapshot()
+        handles = [warm.submit(Request(prompt=list(r.prompt),
+                                       params=r.params)) for r in reqs]
+        t0 = time.perf_counter()
+        warm.run()
+        warm_wall = time.perf_counter() - t0
+        warm_tokens = [h.result().tokens for h in handles]
+        warm_snap = warm.scheduler.stats.snapshot()
+        warm_acc = _mean_trie_acceptance(_acceptance_by_ns(warm_snap, base))
+    finally:
+        os.unlink(path)
+
+    assert warm_tokens == donor_tokens, \
+        "warm restart changed an output (I1 violation)"
+    recovery = warm_acc / max(donor_acc, 1e-9)
+    assert recovery >= 0.8, \
+        (f"warm restart recovered only {recovery:.0%} of donor acceptance "
+         f"({warm_acc:.3f} vs {donor_acc:.3f}; expected >= 80%)")
+
+    warm_tok = sum(len(t) for t in warm_tokens)
+    hits = int(warm_snap["prefix_hits"]) - int(base["prefix_hits"])
+    lookups = int(warm_snap["prefix_lookups"]) - int(base["prefix_lookups"])
+    cell = {"donor_trie_acceptance": round(donor_acc, 4),
+            "warm_trie_acceptance": round(warm_acc, 4),
+            "recovery": round(recovery, 4),
+            "donor_tokens_per_s": round(donor_tok / donor_wall, 2),
+            "warm_tokens_per_s": round(warm_tok / warm_wall, 2),
+            "state_file_kb": round(size_kb, 1),
+            "warm_prefix_hits": hits, "warm_prefix_lookups": lookups}
+    emit("fleet[warm_restart]", warm_wall / max(warm_tok, 1) * 1e6,
+         f"acc {donor_acc:.0%} -> {warm_acc:.0%} ({recovery:.2f}x) | "
+         f"{size_kb:.1f} KiB state | prefix {hits}/{lookups} | lossless ✓")
+    return cell
+
+
+def run(k_prompts: int = 4, repeats: int = 4, max_new: int = 16,
+        n_replicas: int = 3,
+        json_out: Optional[str] = None) -> dict:
+    doc = {"bench": "fleet", **run_routing(
+        k_prompts=k_prompts, repeats=repeats, max_new=max_new,
+        n_replicas=n_replicas)}
+    doc["cells"]["gossip_spill"] = run_gossip_spill(
+        k_prompts=k_prompts, max_new=max_new)
+    doc["cells"]["warm_restart"] = run_warm_restart(
+        k_prompts=k_prompts, repeats=repeats, max_new=max_new)
+    doc["warm_recovery"] = doc["cells"]["warm_restart"]["recovery"]
+    doc["gossip_lift"] = doc["cells"]["gossip_spill"]["lift"]
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {json_out}")
+    return doc
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k-prompts", type=int, default=4,
+                    help="distinct prompts per tenant pool")
+    ap.add_argument("--repeats", type=int, default=4,
+                    help="replay rounds over each tenant's pool")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--json-out", default=None,
+                    help="write all cells to this JSON file "
+                         "(the BENCH_fleet seed)")
+    args = ap.parse_args()
+    run(k_prompts=args.k_prompts, repeats=args.repeats,
+        max_new=args.max_new, n_replicas=args.replicas,
+        json_out=args.json_out)

@@ -87,7 +87,7 @@ def iter_py_files(targets: Iterable[str]) -> Iterable[Path]:
 def main(argv: Optional[Sequence[str]] = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="Invariant linter for the serving engine (R1-R5).")
+        description="Invariant linter for the serving engine (R1-R6).")
     parser.add_argument("paths", nargs="*", default=["src/"],
                         help="files or directories to lint")
     parser.add_argument("--select", default=None,

@@ -18,6 +18,9 @@ a bare stdlib interpreter.
     R5  donated-cache-dict hygiene: key stores must be device arrays
         (a raw np array changes the donation mask and recompiles), key
         deletion changes the pytree structure
+    R6  warm-state pairing: every ``state_dict`` has a matching
+        ``load_state_dict`` on the same class (and vice versa) — the
+        fleet persistence round-trip contract
 """
 from __future__ import annotations
 
@@ -101,8 +104,9 @@ def all_rules() -> List[Rule]:
     from repro.analysis.rules.jit_discipline import JitDisciplineRule
     from repro.analysis.rules.refcounts import RefcountPairingRule
     from repro.analysis.rules.retrace import RetraceHazardRule
+    from repro.analysis.rules.state_pairing import StatePairingRule
     return [DevicePullRule(), JitDisciplineRule(), RefcountPairingRule(),
-            RetraceHazardRule(), DonationMaskRule()]
+            RetraceHazardRule(), DonationMaskRule(), StatePairingRule()]
 
 
 __all__ = ["Finding", "Rule", "all_rules", "dotted_name", "call_name",

@@ -155,6 +155,23 @@ class DraftSource:
                  namespace: str = "") -> Branches:
         return [], []
 
+    # ---- warm-state persistence (repro.fleet)
+    # Shared (cross-request) statistics only: per-request state dies with the
+    # request and must never be serialized.  Sources with no shared state
+    # return {} and accept only {} back — a stateless source presented with a
+    # donor payload signals a source-name collision, not a silent no-op.
+    def state_dict(self) -> Dict[str, object]:
+        return {}
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        if state:
+            raise ValueError(
+                f"draft source {self.name!r} holds no shared state but was "
+                f"given a non-empty warm-state payload")
+
+    def merge_state(self, state: Dict[str, object]) -> None:
+        self.load_state_dict(state)
+
 
 # ------------------------------------------------------------------ TrieSource
 class TrieSource(DraftSource):
@@ -219,6 +236,25 @@ class TrieSource(DraftSource):
         return t.retrieve(context, decoding_length=budget,
                           max_prefix_len=self.config.max_prefix_len,
                           min_matched_tokens=self.config.min_matched_tokens)
+
+    # ---- warm-state persistence
+    def state_dict(self):
+        return {"kind": self.name, "forest": self.forest.state_dict()}
+
+    def _forest_state(self, state) -> Dict[str, object]:
+        if not isinstance(state, dict) or state.get("kind") != self.name:
+            raise ValueError(f"not a {self.name!r} source state: "
+                             f"{type(state).__name__}")
+        forest = state.get("forest")
+        if not isinstance(forest, dict):
+            raise ValueError("trie source state missing 'forest'")
+        return forest
+
+    def load_state_dict(self, state):
+        self.forest.load_state_dict(self._forest_state(state))
+
+    def merge_state(self, state):
+        self.forest.merge_state(self._forest_state(state))
 
 
 # ------------------------------------------------------------ PromptCopySource
@@ -371,6 +407,48 @@ class NgramSource(DraftSource):
             return [], []
         return [chain], [1.0]
 
+    # ---- warm-state persistence
+    def state_dict(self):
+        # tuple keys -> nested lists (JSON-portable); insertion order kept
+        return {"kind": self.name, "order": self.order,
+                "entries": [[list(key), [[int(t), float(c)]
+                                         for t, c in d.items()]]
+                            for key, d in self._counts.items()]}
+
+    @staticmethod
+    def _state_entries(state) -> List[list]:
+        if not isinstance(state, dict) or state.get("kind") != "ngram":
+            raise ValueError(f"not an ngram source state: "
+                             f"{type(state).__name__}")
+        entries = state.get("entries")
+        if not isinstance(entries, list):
+            raise ValueError("ngram source state missing 'entries'")
+        return entries
+
+    def load_state_dict(self, state):
+        entries = self._state_entries(state)
+        counts: Dict[Tuple[int, ...], Dict[int, float]] = {}
+        for key, pairs in entries:
+            counts[tuple(int(t) for t in key)] = {
+                int(t): float(c) for t, c in pairs}
+        self._counts = counts
+
+    def merge_state(self, state):
+        """Count-max merge (the same CRDT-join semantics as the trie, so
+        repeated gossip echoes never inflate counts); halving decay
+        restores the entry cap (the same pressure valve ``_absorb``
+        applies to organic growth)."""
+        entries = self._state_entries(state)
+        for key, pairs in entries:
+            d = self._counts.setdefault(tuple(int(t) for t in key), {})
+            for t, c in pairs:
+                d[int(t)] = max(d.get(int(t), 0.0), float(c))
+        while len(self._counts) > self.config.ngram_max_entries:
+            before = len(self._counts)
+            self._decay()
+            if len(self._counts) >= before:
+                break
+
 
 # ------------------------------------------------------------------- registry
 _REGISTRY: Dict[str, Callable[..., DraftSource]] = {}
@@ -492,6 +570,8 @@ class AdaptiveBudget:
         self.headroom = float(headroom)
         self.ema: Optional[float] = None
         self.value = self.min_budget
+        # autotune quota ceiling (see ``cap``); None = unconstrained
+        self.quota_cap: Optional[int] = None
 
     @classmethod
     def from_policy(cls, policy: DraftPolicy,
@@ -505,6 +585,22 @@ class AdaptiveBudget:
             (1.0 - self.alpha) * self.ema + self.alpha * a)
         want = int(math.ceil(self.ema * self.headroom))
         self.value = min(max(want, self.min_budget), self.max_budget)
+        if self.quota_cap is not None:
+            self.value = min(self.value, self.quota_cap)
+        return self.value
+
+    def cap(self, quota_total: int) -> int:
+        """Clamp the lane's width to the autotune bandit's kept-quota total.
+
+        A namespace whose sources are mostly gated off cannot fill a wide
+        tree — the kept sources' quotas bound the useful slot count, so the
+        lane shrinks instead of padding dead slots.  The ceiling overrides
+        ``min_budget`` (a probe-only lane should draft exactly the probe
+        quota) and is refreshed every gated build, so a recovering source
+        lifts it again.  Host-side only: outputs stay bit-identical (I1).
+        """
+        self.quota_cap = max(int(quota_total), 1)
+        self.value = min(self.value, self.quota_cap)
         return self.value
 
 

@@ -194,6 +194,99 @@ class TrieTree:
         scores = [s for _, s in chosen]
         return branches, scores
 
+    # ---------------------------------------------------------- serialization
+    def state_dict(self) -> Dict[str, list]:
+        """Flatten the persistent trie into parallel arrays.
+
+        Nodes are emitted in preorder, children in dict-insertion order —
+        ``_top_branches`` breaks frequency ties by heap insertion order, so
+        a rebuilt trie must iterate children in the same order as the live
+        one for retrieval to stay bit-identical.  Per-request prompt
+        frequencies are transient (eliminated at retire) and are not
+        serialized.
+        """
+        tokens: List[int] = []
+        parents: List[int] = []
+        freqs: List[float] = []
+        # Explicit stack; push children reversed so pops preserve insertion
+        # order.  parent == -1 means "child of root".
+        stack: List[Tuple[_Node, int]] = [
+            (ch, -1) for ch in reversed(list(self.root.children.values()))]
+        while stack:
+            node, parent = stack.pop()
+            idx = len(tokens)
+            tokens.append(int(node.token))
+            parents.append(int(parent))
+            freqs.append(float(node.freq))
+            for ch in reversed(list(node.children.values())):
+                stack.append((ch, idx))
+        return {"tokens": tokens, "parents": parents, "freqs": freqs}
+
+    @staticmethod
+    def _validate_state(state: Dict[str, list]) -> Tuple[list, list, list]:
+        if not isinstance(state, dict):
+            raise ValueError("trie state must be a dict")
+        try:
+            tokens, parents, freqs = (
+                state["tokens"], state["parents"], state["freqs"])
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"trie state missing array: {e}") from e
+        if not (len(tokens) == len(parents) == len(freqs)):
+            raise ValueError("trie state arrays have mismatched lengths")
+        for i, p in enumerate(parents):
+            if not (-1 <= int(p) < i):
+                raise ValueError(
+                    f"trie state is not preorder (parents[{i}]={p})")
+        return tokens, parents, freqs
+
+    def load_state_dict(self, state: Dict[str, list]) -> None:
+        """Rebuild from ``state_dict`` output, replacing current contents.
+
+        Raises ``ValueError`` on malformed arrays (wrong lengths, parent
+        index out of preorder range, duplicate siblings).
+        """
+        tokens, parents, freqs = self._validate_state(state)
+        root = _Node(token=-1)
+        nodes: List[_Node] = []
+        n = 0
+        for t, p, f in zip(tokens, parents, freqs):
+            parent = root if p == -1 else nodes[int(p)]
+            tok = int(t)
+            if tok in parent.children:
+                raise ValueError("trie state has duplicate sibling tokens")
+            child = _Node(token=tok, freq=float(f))
+            parent.children[tok] = child
+            nodes.append(child)
+            n += 1
+        self.root = root
+        self._n_nodes = n
+
+    def merge_state(self, state: Dict[str, list]) -> None:
+        """Freq-max merge of a serialized trie into this one (gossip).
+
+        Element-wise max is a CRDT join: idempotent, commutative and
+        associative, so repeated all-to-all gossip converges instead of
+        double-counting (a sum-merge re-adds A's own frequencies every
+        time they echo back through B, inflating them exponentially with
+        the exchange count — which drowns the prompt-frequency boost and
+        stalls decay-pruning).  Walks the arrays directly instead of going
+        through ``insert`` so a single bulk merge does not fire the
+        per-insert prune trigger midway (callers enforce capacity once,
+        after the merge).
+        """
+        tokens, parents, freqs = self._validate_state(state)
+        nodes: List[_Node] = []
+        for t, p, f in zip(tokens, parents, freqs):
+            parent = self.root if p == -1 else nodes[int(p)]
+            tok = int(t)
+            child = parent.children.get(tok)
+            if child is None:
+                child = _Node(token=tok)
+                parent.children[tok] = child
+                self._n_nodes += 1
+            child.freq = max(child.freq, float(f))
+            nodes.append(child)
+
     # -------------------------------------------------------------- estimates
     def memory_bytes(self) -> int:
         """Rough host memory estimate of the trie."""
@@ -269,6 +362,46 @@ class TrieForest:
 
     def memory_bytes(self) -> int:
         return sum(t.memory_bytes() for t in self._tries.values())
+
+    # ---------------------------------------------------------- serialization
+    def state_dict(self) -> Dict[str, object]:
+        """Per-namespace serialized tries (empty namespaces are skipped)."""
+        return {"namespaces": {ns: t.state_dict()
+                               for ns, t in self._tries.items() if len(t)}}
+
+    @staticmethod
+    def _state_namespaces(state: Dict[str, object]) -> Dict[str, dict]:
+        if not isinstance(state, dict):
+            raise ValueError("forest state must be a dict")
+        ns_map = state.get("namespaces")
+        if not isinstance(ns_map, dict):
+            raise ValueError("forest state missing 'namespaces' map")
+        return ns_map
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        """Replace every namespace with the serialized forest's contents.
+        The local capacity/boost/decay configuration wins over the donor's."""
+        ns_map = self._state_namespaces(state)
+        self._tries = {"": TrieTree(capacity=self.capacity,
+                                    prompt_boost=self.prompt_boost,
+                                    decay=self.decay)}
+        for ns, tree_state in ns_map.items():
+            self.tree(str(ns)).load_state_dict(tree_state)
+
+    def merge_state(self, state: Dict[str, object]) -> None:
+        """Gossip merge: freq-max each donor namespace into the local forest,
+        then decay-prune until the shared capacity budget holds again."""
+        ns_map = self._state_namespaces(state)
+        for ns, tree_state in ns_map.items():
+            self.tree(str(ns)).merge_state(tree_state)
+        # Merged branches carry no live prompt_freq, so repeated decay always
+        # makes progress on them; the no-progress guard covers a forest pinned
+        # by live requests' prompt branches.
+        while len(self) > self.capacity:
+            before = len(self)
+            self.prune_all()
+            if len(self) >= before:
+                break
 
 
 __all__ = ["TrieTree", "TrieForest"]

@@ -277,6 +277,37 @@ class PrefixCache:
                 min(victims, key=lambda n: n.last_access)))
         return freed
 
+    # ------------------------------------------------------------- warm state
+    def hot_keys(self, max_keys: Optional[int] = None
+                 ) -> Dict[str, List[List[int]]]:
+        """Hottest resident prefix token-chains per namespace, most recently
+        used first (``max_keys`` caps each namespace's list).
+
+        Warm-state persistence (repro.fleet) serializes KEYS only: the KV
+        blocks behind them are device-resident and cannot survive a restart.
+        A warm-restarted engine re-prefills each key once (priming requests)
+        and the retire-time insert repopulates the tree through the regular
+        machinery — recovering hit rate without trusting foreign KV bytes.
+        """
+        out: Dict[str, List[List[int]]] = {}
+        for ns, root in self._roots.items():
+            chains: List[Tuple[int, List[int]]] = []
+            stack: List[Tuple[_Node, List[int]]] = [
+                (ch, list(ch.key)) for ch in root.children.values()]
+            while stack:
+                node, toks = stack.pop()
+                kids = list(node.children.values())
+                if not kids:
+                    chains.append((node.last_access, toks))
+                    continue
+                stack.extend((ch, toks + list(ch.key)) for ch in kids)
+            chains.sort(key=lambda c: -c[0])
+            if max_keys is not None:
+                chains = chains[:max_keys]
+            if chains:
+                out[ns] = [toks for _, toks in chains]
+        return out
+
     def clear(self) -> List[int]:
         """Drop every cached prefix (all namespaces); returns freed ids.
         Post-order: repeatedly strip unlocked leaves."""

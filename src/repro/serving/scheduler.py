@@ -130,6 +130,34 @@ class NamespaceStats:
                 "p99_ttft_s": self._pct(self.ttfts, 0.99),
                 "p99_queue_s": self._pct(self.queue_waits, 0.99)}
 
+    # ---- fleet rollup (repro.fleet): raw samples travel, not percentiles —
+    # a fleet p99 must be computed over the union of every replica's
+    # latencies, never averaged from per-replica percentiles.
+    def snapshot(self) -> Dict[str, object]:
+        return {"submitted": self.submitted, "finished": self.finished,
+                "cancelled": self.cancelled, "tokens": self.tokens,
+                "lane_steps": self.lane_steps,
+                "latencies": list(self.latencies),
+                "ttfts": list(self.ttfts),
+                "queue_waits": list(self.queue_waits),
+                "source_drafted": dict(self.source_drafted),
+                "source_accepted": dict(self.source_accepted)}
+
+    def merge(self, other: Dict[str, object]) -> None:
+        """Accumulate another replica's snapshot of the same namespace."""
+        self.submitted += int(other["submitted"])
+        self.finished += int(other["finished"])
+        self.cancelled += int(other["cancelled"])
+        self.tokens += int(other["tokens"])
+        self.lane_steps += int(other["lane_steps"])
+        self.latencies.extend(float(x) for x in other["latencies"])
+        self.ttfts.extend(float(x) for x in other["ttfts"])
+        self.queue_waits.extend(float(x) for x in other["queue_waits"])
+        for k, v in dict(other["source_drafted"]).items():
+            self.source_drafted[k] = self.source_drafted.get(k, 0) + int(v)
+        for k, v in dict(other["source_accepted"]).items():
+            self.source_accepted[k] = self.source_accepted.get(k, 0) + int(v)
+
 
 class SchedulerStats:
     """Aggregate serving-loop statistics (occupancy is the continuous-
@@ -171,6 +199,18 @@ class SchedulerStats:
         """namespace -> SLO summary (percentiles, occupancy, counts)."""
         return {name: st.summary(self.decode_steps, self.lanes)
                 for name, st in sorted(self.namespaces.items())}
+
+    def snapshot(self) -> Dict[str, object]:
+        """Portable stats snapshot for the fleet rollup (plain data only —
+        crosses the subprocess-replica boundary as JSON-able payload)."""
+        return {"lanes": self.lanes, "decode_steps": self.decode_steps,
+                "active_lane_steps": self.active_lane_steps,
+                "admitted": self.admitted, "finished": self.finished,
+                "prefix_lookups": self.prefix_lookups,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "namespaces": {ns: st.snapshot()
+                               for ns, st in self.namespaces.items()}}
 
     @property
     def occupancy(self) -> float:
@@ -868,6 +908,19 @@ class ContinuousScheduler:
             keep, quotas = self.autotuner.select(
                 rs.draft.namespace, [s.name for s in sources], base)
             sources = [sources[i] for i in keep]
+            # fold the bandit's kept-quota total into the lane width: a
+            # namespace whose sources are mostly gated off shrinks its tree
+            # instead of padding dead slots.  With no explicit quotas each
+            # kept source may fill the whole budget (total >= eff — no
+            # shrink), so only provisioned policies are affected.
+            total = sum(int(q) for q in quotas)
+            if total < eff:
+                if rs.budget_ctl is not None:
+                    budget = rs.budget_ctl.cap(total)
+                else:
+                    budget = min(eff if budget is None else budget, total)
+            elif rs.budget_ctl is not None:
+                rs.budget_ctl.quota_cap = None   # sources recovered
         return build_draft_from_policy(
             sources, rs.draft, self.config, rs.rid,
             rs.context, self.fns.pad_id, self.width, budget=budget,

@@ -1,0 +1,21 @@
+"""Tiny-model engine builder for fleet tests.
+
+Lives outside test_fleet.py so a spawned subprocess replica can import
+the builder without dragging in the test module (whose hypothesis import
+is satisfied by a conftest shim that only exists in the pytest parent).
+"""
+import jax
+
+from repro.models.transformer import TransformerConfig, init_params
+from repro.serving.api import EngineConfig, ServingEngine, build_session_fns
+
+TINY_CFG = TransformerConfig(n_layers=1, d_model=32, n_heads=4, n_kv_heads=2,
+                             d_ff=64, vocab_size=53, max_seq_len=160)
+TINY_ECFG = EngineConfig(lanes=2, prefill_len=32, decoding_length=8,
+                         branch_length=4)
+
+
+def build_tiny() -> ServingEngine:
+    params = init_params(TINY_CFG, jax.random.key(11))
+    return ServingEngine(build_session_fns(TINY_ECFG, TINY_CFG, params),
+                         TINY_ECFG)

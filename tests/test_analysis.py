@@ -243,6 +243,60 @@ def test_r5_accepts_device_leaves():
     assert _rules(src, "R5") == []
 
 
+# ------------------------------------------------------------------- R6
+def test_r6_flags_unpaired_state_dict():
+    src = """
+        class SaveOnly:
+            def state_dict(self):
+                return {}
+
+        class LoadOnly:
+            def load_state_dict(self, state):
+                pass
+    """
+    found = _rules(src, "R6")
+    assert len(found) == 2
+    assert "never be restored" in found[0].message
+    assert "never donates" in found[1].message
+
+
+def test_r6_accepts_paired_and_suppressed():
+    src = """
+        class Paired:
+            def state_dict(self):
+                return {}
+
+            def load_state_dict(self, state):
+                pass
+
+        class Justified:
+            def load_state_dict(self, state):  # repro-lint: disable=R6
+                pass
+    """
+    assert _rules(src, "R6") == []
+
+
+def test_r6_inherited_half_does_not_pair():
+    # Inheriting one half does not satisfy the pairing: the serialized
+    # shape is the defining class's business, so a subclass overriding
+    # only load_state_dict is flagged.
+    src = """
+        class Base:
+            def state_dict(self):
+                return {}
+
+            def load_state_dict(self, state):
+                pass
+
+        class Child(Base):
+            def load_state_dict(self, state):
+                pass
+    """
+    found = _rules(src, "R6")
+    assert len(found) == 1
+    assert "Child" in found[0].message
+
+
 # ------------------------------------------------------- driver / repo gate
 def test_repo_lints_clean():
     """The merge gate: `python -m repro.analysis.lint src/` exits 0."""
@@ -261,7 +315,8 @@ def test_lint_cli_exit_codes(tmp_path):
         [sys.executable, "-m", "repro.analysis.lint", "--list-rules"],
         capture_output=True, text=True, cwd=str(REPO))
     assert proc.returncode == 0
-    assert all(r in proc.stdout for r in ("R1", "R2", "R3", "R4", "R5"))
+    assert all(r in proc.stdout
+               for r in ("R1", "R2", "R3", "R4", "R5", "R6"))
 
 
 def test_lint_file_select(tmp_path):
